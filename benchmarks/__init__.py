@@ -1,0 +1,11 @@
+"""Benchmarks — one module per paper table/figure + the roofline report.
+
+table1_kan_cost   Table I analogue: why direct KAN->FPGA mapping explodes.
+table2_accuracy   Table II: BNN/QNN/KAN/BiKA accuracy on TFC/SFC/LFC/CNV.
+table3_resources  Table III: LUT/FF/latency/ADP/PDP via the hwsim model.
+fig10_sensitivity Fig. 10: batch x LR sensitivity grid for BiKA.
+fig11_curves      Fig. 11: train/val divergence (CIFAR-like overfit signature).
+m_sweep           Fig. 5-6: approximation error vs threshold budget m.
+kernel_bench      CAC kernel vs dense matmul wall time (CPU-relative).
+roofline          3-term roofline from the dry-run artifacts (EXPERIMENTS.md).
+"""

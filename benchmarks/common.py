@@ -1,0 +1,114 @@
+"""Shared helpers: tiny training loop for the paper models + timing."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.vision import digits_batch, textures_batch
+from repro.models.paper import PaperConfig, build_paper_model
+from repro.nn.module import unbox
+from repro.optim.adamw import OptimizerSpec, make_optimizer
+from repro.train.loss import softmax_xent
+
+__all__ = ["train_paper_model", "evaluate", "timed", "csv_row"]
+
+
+def _dataset(name: str):
+    return digits_batch if name == "digits" else textures_batch
+
+
+def train_paper_model(
+    cfg: PaperConfig,
+    dataset: str = "digits",
+    *,
+    steps: int = 300,
+    batch: int = 128,
+    lr: float = 1e-3,
+    seed: int = 0,
+    eval_every: int = 0,
+    eval_batches: int = 4,
+) -> Dict:
+    """Short training run; returns final train/val accuracy (+ curves)."""
+    init, apply = build_paper_model(cfg)
+    params = unbox(init(jax.random.PRNGKey(seed)))
+    opt_init, opt_update = make_optimizer(
+        OptimizerSpec(peak_lr=lr, warmup=max(steps // 20, 10), total_steps=steps,
+                      weight_decay=0.0)
+    )
+    opt = opt_init(params)
+    get_batch = _dataset(dataset)
+
+    def loss_fn(p, x, y):
+        logits = apply(p, x)
+        return softmax_xent(logits, y)[0], logits
+
+    @jax.jit
+    def step_fn(p, o, x, y):
+        (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(p, x, y)
+        p, o, stats = opt_update(grads, o, p)
+        acc = jnp.mean(jnp.argmax(logits, -1) == y)
+        return p, o, loss, acc
+
+    @jax.jit
+    def eval_fn(p, x, y):
+        logits = apply(p, x)
+        return jnp.mean(jnp.argmax(logits, -1) == y)
+
+    curves = {"step": [], "train_acc": [], "val_acc": [], "loss": []}
+    tr_acc = 0.0
+    for s in range(steps):
+        x, y = get_batch(seed, s, batch)
+        params, opt, loss, tr_acc = step_fn(params, opt, x, y)
+        if eval_every and ((s + 1) % eval_every == 0 or s == 0):
+            va = float(
+                np.mean([
+                    float(eval_fn(params, *get_batch(seed + 10_000, 50_000 + s * 17 + j, batch)))
+                    for j in range(eval_batches)
+                ])
+            )
+            curves["step"].append(s + 1)
+            curves["train_acc"].append(float(tr_acc))
+            curves["val_acc"].append(va)
+            curves["loss"].append(float(loss))
+
+    val = float(
+        np.mean([
+            float(eval_fn(params, *get_batch(seed + 10_000, 90_000 + j, batch)))
+            for j in range(max(eval_batches, 8))
+        ])
+    )
+    return {
+        "train_acc": float(tr_acc),
+        "val_acc": val,
+        "curves": curves,
+        "params": params,
+    }
+
+
+def evaluate(apply, params, dataset: str, *, batches: int = 8, batch: int = 128, seed: int = 7):
+    get_batch = _dataset(dataset)
+    accs = []
+    for j in range(batches):
+        x, y = get_batch(seed, 123_000 + j, batch)
+        accs.append(float(jnp.mean(jnp.argmax(apply(params, x), -1) == y)))
+    return float(np.mean(accs))
+
+
+def timed(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall microseconds per call (post-jit)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

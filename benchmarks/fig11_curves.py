@@ -1,0 +1,48 @@
+"""Fig. 11 analogue: train/validation divergence. The paper observes BiKA
+reaching ~90% train accuracy on CIFAR-10 with only ~55% validation (overfit)
+while MNIST shows no such gap. We reproduce the *signature*: textures (hard,
+noisy) diverge; digits do not.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.models.paper import CNV, TFC
+from .common import train_paper_model
+
+
+def main(quick: bool = True) -> List[str]:
+    steps = 80 if quick else 1500
+    # easy task: no divergence expected
+    easy = train_paper_model(TFC.replace(mode="bika"), "digits", steps=steps,
+                             batch=128, lr=3e-3, eval_every=max(steps // 8, 1))
+    # hard task: reduced CNV (quick mode) on textures
+    cnv = CNV.replace(mode="bika",
+                      conv_plan=(8, "P", 16, "P", 32, "P")
+                      if quick else CNV.conv_plan,
+                      features=(64, 10) if quick else CNV.features)
+    hard = train_paper_model(cnv, "textures", steps=steps, batch=32, lr=3e-3,
+                             eval_every=max(steps // 8, 1))
+    gap_easy = easy["train_acc"] - easy["val_acc"]
+    gap_hard = hard["train_acc"] - hard["val_acc"]
+    out = {
+        "easy": {k: easy[k] for k in ("train_acc", "val_acc", "curves")},
+        "hard": {k: hard[k] for k in ("train_acc", "val_acc", "curves")},
+        "gap_easy": gap_easy,
+        "gap_hard": gap_hard,
+        "overfit_signature": gap_hard > gap_easy,
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/fig11_curves.json", "w") as f:
+        json.dump(out, f, indent=1)
+    return [
+        f"fig11/divergence,0.0,easy_gap={gap_easy:.3f} hard_gap={gap_hard:.3f} "
+        f"signature={'OK' if gap_hard > gap_easy else 'MISSING'} "
+        f"(paper: ~0.35 gap on CIFAR-10, ~0 on MNIST)"
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

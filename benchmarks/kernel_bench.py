@@ -1,0 +1,63 @@
+"""CAC-vs-baseline contraction wall time, CPU-relative (this container has no
+TPU; numbers are meaningful as *ratios* between XLA paths on the same host).
+Pallas interpret-mode timing is excluded from conclusions (it is a Python
+emulator) but one small shape is reported for completeness.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bika as bika_core
+from .common import timed
+
+
+def main(quick: bool = True) -> List[str]:
+    m, k, n = (256, 1024, 512) if quick else (1024, 4096, 1024)
+    key = jax.random.PRNGKey(0)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n)) * 0.05
+    beta = jax.random.normal(kb, (k, n)) * 0.05
+    tau, s = bika_core.to_hardware(w, beta)
+
+    dense = jax.jit(lambda a, b: a @ b)
+    bika_fused = jax.jit(bika_core.bika_matmul)
+    bika_cvjp_g = jax.jit(jax.grad(lambda xx, ww, bb:
+                                   bika_core.bika_matmul_cvjp(xx, ww, bb).sum(),
+                                   argnums=(0, 1, 2)))
+    bika_fused_g = jax.jit(jax.grad(lambda xx, ww, bb:
+                                    bika_core.bika_matmul(xx, ww, bb).sum(),
+                                    argnums=(0, 1, 2)))
+    hw = jax.jit(lambda a, t, ss: bika_core.bika_matmul_hw(a, t, ss, clamp=False))
+
+    t_dense = timed(dense, x, w)
+    t_fused = timed(bika_fused, x, w, beta)
+    t_hw = timed(hw, x, tau, s)
+    t_gc = timed(bika_cvjp_g, x, w, beta)
+    t_gf = timed(bika_fused_g, x, w, beta)
+
+    rows = [
+        f"kernel/dense_matmul,{t_dense:.1f},1.00x baseline ({m}x{k}x{n})",
+        f"kernel/bika_fused_fwd,{t_fused:.1f},{t_fused / t_dense:.2f}x dense",
+        f"kernel/bika_hw_fwd,{t_hw:.1f},{t_hw / t_dense:.2f}x dense",
+        f"kernel/bika_grad_cvjp,{t_gc:.1f},{t_gc / t_gf:.2f}x of fused-grad "
+        f"(bounded-memory backward)",
+    ]
+    if quick:
+        from repro.kernels import ops
+
+        mi, ki, ni = 64, 128, 64
+        xi, ti, si = x[:mi, :ki], tau[:ki, :ni], s[:ki, :ni]
+        t_pal = timed(lambda: ops.cac_matmul(xi, ti, si), iters=2, warmup=1)
+        rows.append(
+            f"kernel/pallas_interpret_{mi}x{ki}x{ni},{t_pal:.1f},"
+            f"interpret-mode (emulator; excluded from conclusions)"
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,123 @@
+"""§Perf hillclimbing driver: baseline + hypothesis-driven variants for the
+three chosen cells, each re-lowered/re-compiled on the production mesh and
+re-analyzed with the static roofline model. Writes results/perf/<cell>.json
+and prints the hypothesis -> change -> before/after log that EXPERIMENTS.md
+§Perf records.
+
+Cells (chosen per the brief):
+  smollm-360m:train_4k   worst roofline fraction (memory-dominated; 15 heads
+                         vs model=16 replicates attention);
+  grok-1-314b:train_4k   most collective-bound (FSDP weight gathers x
+                         microbatches dominate);
+  qwen1.5-32b:decode_32k most representative of the paper's technique (the
+                         CAC comparator serve path with int8+packed weights).
+
+Run:  PYTHONPATH=src:. python -m benchmarks.perf_hillclimb
+(needs the 512-device XLA flag -> re-execs itself with it set).
+"""
+import json
+import os
+import sys
+
+if "--_child" not in sys.argv:
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+    )
+    os.execv(sys.executable, [sys.executable, "-m", "benchmarks.perf_hillclimb",
+                              "--_child"] + sys.argv[1:])
+
+from typing import Dict, List, Optional  # noqa: E402
+
+PEAK, HBM, LINK = 197e12, 819e9, 50e9
+
+
+def _terms(rec) -> Dict[str, float]:
+    st = rec["static"]
+    return {
+        "compute_s": st["flops"] / PEAK,
+        "memory_s": st["bytes"] / HBM,
+        "collective_s": st["collectives"]["total"]["wire_bytes"] / LINK,
+    }
+
+
+def run_variant(arch, shape, label, *, rules=None, extra=None, microbatches=None,
+                shard_grads=False, quantized_kv=False):
+    import jax
+
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh()
+    rec = run_cell(arch, shape, mesh, "pod16x16", out_dir=None, rules=rules,
+                   extra_cfg=extra, microbatches=microbatches,
+                   shard_grads=shard_grads, quantized_kv=quantized_kv)
+    if rec["status"] != "ok":
+        return {"label": label, "status": "error", "error": rec.get("error")}
+    t = _terms(rec)
+    t.update(label=label, status="ok", dominant=max(
+        ("compute_s", "memory_s", "collective_s"), key=t.get),
+        microbatches=rec.get("microbatches"))
+    return t
+
+
+def main():
+    from repro.distributed.sharding import FSDP_RULES, LOGICAL_RULES, ShardingRules
+
+    tp_rules = ShardingRules(LOGICAL_RULES)
+    plans = {
+        "smollm-360m:train_4k": [
+            ("baseline (FSDP+TP, cvjp)", {}),
+            ("H1 pad heads 15->16 (TP attention)",
+             {"extra": {"tp_pad_heads": True}}),
+            ("H2 +bf16 params (halve gather/opt traffic)",
+             {"extra": {"tp_pad_heads": True, "param_dtype": "bfloat16"}}),
+            ("H3 +fewer microbatches (4: fewer weight gathers)",
+             {"extra": {"tp_pad_heads": True, "param_dtype": "bfloat16"},
+              "microbatches": 4}),
+            ("H4 +ZeRO grad sharding",
+             {"extra": {"tp_pad_heads": True, "param_dtype": "bfloat16"},
+              "microbatches": 4, "shard_grads": True}),
+        ],
+        "grok-1-314b:train_4k": [
+            ("baseline (FSDP+TP, scatter-MoE)", {}),
+            ("H1 bf16 params (halve FSDP gather bytes)",
+             {"extra": {"param_dtype": "bfloat16"}}),
+            ("H2 +microbatches 4 (half the per-step gathers)",
+             {"extra": {"param_dtype": "bfloat16"}, "microbatches": 4}),
+            ("H3 +microbatches 2",
+             {"extra": {"param_dtype": "bfloat16"}, "microbatches": 2}),
+            ("H4 +ZeRO grad sharding (reduce-scatter partial grads)",
+             {"extra": {"param_dtype": "bfloat16"}, "microbatches": 2,
+              "shard_grads": True}),
+        ],
+        "qwen1.5-32b:decode_32k": [
+            ("baseline (FSDP rules on serve weights)", {}),
+            ("H1 TP-only rules (weights resident, no gathers)",
+             {"rules": tp_rules}),
+            ("H2 +pad heads 40->48",
+             {"rules": tp_rules, "extra": {"tp_pad_heads": True}}),
+            ("H3 +int8 KV cache (halve cache reads)",
+             {"rules": tp_rules, "extra": {"tp_pad_heads": True},
+              "quantized_kv": True}),
+        ],
+    }
+    os.makedirs("results/perf", exist_ok=True)
+    for cell, variants in plans.items():
+        arch, shape = cell.split(":")
+        rows: List[Dict] = []
+        for label, kw in variants:
+            r = run_variant(arch, shape, label, **kw)
+            rows.append(r)
+            if r["status"] == "ok":
+                print(f"[{cell}] {label}: comp {r['compute_s']:.2f}s "
+                      f"mem {r['memory_s']:.2f}s coll {r['collective_s']:.2f}s "
+                      f"dom={r['dominant']}", flush=True)
+            else:
+                print(f"[{cell}] {label}: ERROR {r['error'][:200]}", flush=True)
+        with open(f"results/perf/{arch}__{shape}.json", "w") as f:
+            json.dump(rows, f, indent=1)
+    print("hillclimb done")
+
+
+if __name__ == "__main__":
+    main()

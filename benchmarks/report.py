@@ -1,0 +1,82 @@
+"""Assemble EXPERIMENTS.md sections that come from artifacts:
+dry-run summary table, roofline tables, perf hillclimb log.
+
+    PYTHONPATH=src:. python -m benchmarks.report > results/report_sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .roofline import analyze_record, load_dir
+
+
+def dryrun_table(d: str) -> str:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(d, "*.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            rows.append(f"| {rec['arch']} | {rec['shape']} | FAIL | | | | |")
+            continue
+        mem = rec.get("memory", {})
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | ok | {rec.get('lower_s', 0):.1f}"
+            f" | {rec.get('compile_s', 0):.1f} | {mem.get('argument_size_in_bytes', 0)/2**30:.2f}"
+            f" | {mem.get('temp_size_in_bytes', 0)/2**30:.1f} |"
+        )
+    hdr = ("| arch | shape | status | lower s | compile s | args GiB/dev | "
+           "temp GiB/dev* |\n|---|---|---|---|---|---|---|\n")
+    return hdr + "\n".join(rows)
+
+
+def roofline_md(d: str) -> str:
+    rows = load_dir(d)
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "MODEL_FLOPS | useful | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3g} | "
+            f"{r['t_memory_s']:.3g} | {r['t_collective_s']:.3g} | "
+            f"**{r['dominant']}** | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.3f} |"
+        )
+    return hdr + "\n".join(lines)
+
+
+def perf_md() -> str:
+    out = []
+    for path in sorted(glob.glob("results/perf/*.json")):
+        cell = os.path.basename(path)[:-5].replace("__", ":")
+        rows = json.load(open(path))
+        out.append(f"\n#### {cell}\n")
+        out.append("| variant | compute s | memory s | collective s | dominant |")
+        out.append("|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                out.append(f"| {r['label']} | ERROR | | | |")
+                continue
+            out.append(
+                f"| {r['label']} | {r['compute_s']:.2f} | {r['memory_s']:.2f} | "
+                f"{r['collective_s']:.2f} | {r['dominant'].replace('_s','')} |"
+            )
+    return "\n".join(out)
+
+
+def main(quick: bool = True):
+    parts = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        d = f"results/dryrun/{mesh}"
+        if os.path.isdir(d):
+            parts.append(f"\n### Dry-run summary — {mesh}\n\n" + dryrun_table(d))
+            parts.append(f"\n### Roofline — {mesh}\n\n" + roofline_md(d))
+    if os.path.isdir("results/perf"):
+        parts.append("\n### Perf variants\n" + perf_md())
+    print("\n".join(parts))
+    return []
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table2,roofline]
+
+Prints ``name,us_per_call,derived`` CSV rows; artifacts go to results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from . import (
+    fig10_sensitivity,
+    fig11_curves,
+    kernel_bench,
+    m_sweep,
+    roofline,
+    table1_kan_cost,
+    table2_accuracy,
+    table3_resources,
+)
+
+SUITES = {
+    "table1": table1_kan_cost,
+    "table2": table2_accuracy,
+    "table3": table3_resources,
+    "fig10": fig10_sensitivity,
+    "fig11": fig11_curves,
+    "m_sweep": m_sweep,
+    "kernel": kernel_bench,
+    "roofline": roofline,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale settings")
+    ap.add_argument("--only", default=None, help="comma list of suites")
+    args = ap.parse_args(argv)
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = 0
+    for name in names:
+        mod = SUITES[name]
+        t0 = time.time()
+        try:
+            for row in mod.main(quick=not args.full):
+                print(row)
+        except Exception as e:
+            failed += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+        print(f"{name}/_wall,{(time.time() - t0) * 1e6:.0f},suite wall time")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Table III analogue: accelerator resources + latency from the calibrated
+analytic model (src/repro/hwsim). Reports model-vs-paper per number and the
+paper's three headline claims (LUT reductions; BiKA 2.17-3.30x vs QNN;
+BNN-SIMD fastest)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from repro.hwsim import (
+    PAPER_TABLE3,
+    adp,
+    array_resources,
+    calibrate_latency,
+    latency_us,
+    pdp,
+)
+
+
+def main(quick: bool = True) -> List[str]:
+    rows: List[str] = []
+    models = calibrate_latency()
+    table = {}
+    for mode in ("bika", "bnn", "qnn"):
+        r = array_resources(mode)
+        p = PAPER_TABLE3[mode]
+        table[mode] = {
+            "LUT_model": r["LUT"], "LUT_paper": p["LUT"],
+            "FF_model": r["FF"], "FF_paper": p["FF"],
+            "ADP_model": adp(mode, r), "PDP": pdp(mode),
+            "latency_us_model": {n: latency_us(mode, n, models) for n in ("tfc", "sfc", "lfc")},
+            "latency_us_paper": p["latency_us"],
+        }
+    b, n, q = (table[m]["LUT_model"] for m in ("bika", "bnn", "qnn"))
+    claims = {
+        "lut_reduction_vs_bnn_pct": 100 * (1 - b / n),
+        "lut_reduction_vs_bnn_paper": 27.73,
+        "lut_reduction_vs_qnn_pct": 100 * (1 - b / q),
+        "lut_reduction_vs_qnn_paper": 51.54,
+        "bika_vs_qnn_speedup": [
+            latency_us("qnn", net, models) / latency_us("bika", net, models)
+            for net in ("tfc", "sfc", "lfc")
+        ],
+        "bika_vs_qnn_speedup_paper": [2.17, 3.30],
+        "bnn_fastest": all(
+            latency_us("bnn", net, models)
+            < min(latency_us("bika", net, models), latency_us("qnn", net, models))
+            for net in ("tfc", "sfc", "lfc")
+        ),
+        "bika_lowest_adp": adp("bika") < min(adp("bnn"), adp("qnn")),
+        "bika_lowest_pdp": pdp("bika") < min(pdp("bnn"), pdp("qnn")),
+    }
+    os.makedirs("results", exist_ok=True)
+    with open("results/table3_resources.json", "w") as f:
+        json.dump({"table": table, "claims": claims}, f, indent=1)
+
+    for mode in ("bika", "bnn", "qnn"):
+        t = table[mode]
+        rows.append(
+            f"table3/{mode}_lut,{t['latency_us_model']['tfc']:.2f},"
+            f"LUT={t['LUT_model']:.0f}(paper {t['LUT_paper']})"
+        )
+    rows.append(
+        "table3/claims,0.0,"
+        f"dLUT_bnn={claims['lut_reduction_vs_bnn_pct']:.2f}%(27.73) "
+        f"dLUT_qnn={claims['lut_reduction_vs_qnn_pct']:.2f}%(51.54) "
+        f"qnn_speedup={min(claims['bika_vs_qnn_speedup']):.2f}-"
+        f"{max(claims['bika_vs_qnn_speedup']):.2f}x(2.17-3.30) "
+        f"bnn_fastest={claims['bnn_fastest']} adp_best={claims['bika_lowest_adp']}"
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,16 @@
+"""Repo-root conftest: make `repro` (src layout) and `benchmarks` importable
+and register the `slow` marker. Does NOT touch XLA device flags — smoke
+tests/benches must see the real 1-device CPU; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see tests/test_distributed.py).
+"""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.abspath(__file__))
+for p in (ROOT, os.path.join(ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: multi-device subprocess tests")

@@ -1,0 +1,75 @@
+"""End-to-end LM training driver with checkpoint/restart — the (b) deliverable.
+
+Presets:
+  demo  (default) ~4M-param smollm-family BiKA LM, 200 steps on CPU in
+        minutes; demonstrates the full path: data -> sharded train_step ->
+        checkpoint -> (optional injected crash) -> restart -> loss curve.
+  100m  a ~100M-param config (smollm-360m at 16 layers) for a few hundred
+        steps — sized for a single TPU host; runs on CPU too, just slowly.
+  full  the exact smollm-360m config on the production mesh (TPU pod).
+
+    PYTHONPATH=src:. python examples/train_lm.py --preset demo --steps 200 \
+        --ckpt /tmp/bika_lm --crash-at 120
+"""
+import argparse
+import os
+
+import jax
+
+from repro.configs import get_config, get_smoke
+from repro.train.trainer import SimulatedFailure, TrainConfig, Trainer, run_with_restarts
+
+
+def preset_arch(name: str):
+    if name == "demo":
+        return get_smoke("smollm-360m", compute_mode="bika").replace(
+            n_layers=4, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+            d_ff=704, vocab=4096, remat=False)
+    if name == "100m":
+        return get_config("smollm-360m", compute_mode="bika").replace(n_layers=16)
+    return get_config("smollm-360m", compute_mode="bika")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="demo", choices=("demo", "100m", "full"))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/bika_train_lm")
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="inject a failure at this step; the supervisor restarts")
+    args = ap.parse_args()
+
+    arch = preset_arch(args.preset)
+    cfg = TrainConfig(
+        arch=arch, seq_len=args.seq_len, global_batch=args.batch,
+        steps=args.steps, ckpt_dir=args.ckpt, ckpt_every=max(args.steps // 4, 10),
+        log_every=max(args.steps // 20, 1), async_ckpt=True,
+    )
+    made = {"n": 0}
+
+    def make():
+        made["n"] += 1
+        fail = args.crash_at if made["n"] == 1 else None
+        return Trainer(cfg, fail_at_step=fail)
+
+    params, _, log, restarts = run_with_restarts(make)
+    print(f"\npreset={args.preset} restarts={restarts}")
+    print(f"{'step':>6} {'loss':>8} {'acc':>6} {'lr':>9} {'tok/s':>9}")
+    prev_t, prev_step = None, None
+    for m in log:
+        tput = ""
+        if prev_t is not None and m["wall_s"] > prev_t:
+            toks = (m["step"] - prev_step) * args.batch * args.seq_len
+            tput = f"{toks / (m['wall_s'] - prev_t):9.0f}"
+        print(f"{m['step']:>6} {m['loss']:8.4f} {m['accuracy']:6.3f} "
+              f"{m['lr']:9.2e} {tput:>9}")
+        prev_t, prev_step = m["wall_s"], m["step"]
+    first, last = log[0]["loss"], log[-1]["loss"]
+    print(f"\nloss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro.checkpoint — fault-tolerant sharded checkpoints."""
+from .manager import CheckpointManager, latest_step, restore, save
+
+__all__ = ["CheckpointManager", "save", "restore", "latest_step"]

@@ -1,0 +1,27 @@
+"""smollm-360m: llama-arch small dense LM, GQA 15q/5kv — exact public config [hf:HuggingFaceTB/SmolLM-135M; hf].\n\nSMOKE is the reduced same-family config exercised by tests on CPU.\n"""
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='smollm-360m',
+    family='lm',
+    n_layers=32,
+    d_model=960,
+    n_heads=15,
+    n_kv_heads=5,
+    d_ff=2560,
+    vocab=49152,
+    head_dim=64,
+    activation='silu',
+    gated_mlp=True,
+    norm='rmsnorm',
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=2,
+    d_model=96,
+    n_heads=3,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab=512,
+)

@@ -1,0 +1,29 @@
+"""xlstm-125m: sLSTM + mLSTM blocks (recurrent; d_ff=0 — no FFN) — exact public config [arXiv:2405.04517; unverified].\n\nSMOKE is the reduced same-family config exercised by tests on CPU.\n"""
+from repro.models.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='xlstm-125m',
+    family='xlstm',
+    n_layers=12,
+    d_model=768,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    head_dim=192,
+    activation='silu',
+    gated_mlp=False,
+    norm='layernorm',
+    slstm_every=4,
+    full_attention=False,
+)
+
+SMOKE = CONFIG.replace(
+    n_layers=3,
+    d_model=64,
+    n_heads=2,
+    n_kv_heads=2,
+    head_dim=32,
+    vocab=512,
+    slstm_every=2,
+)

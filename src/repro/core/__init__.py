@@ -1,0 +1,47 @@
+"""repro.core — the paper's contribution: BiKA threshold math + baselines.
+
+Layout:
+  ste.py         Sign / round / clip straight-through estimators (§II-B).
+  thresholds.py  Eq. 1-7 piecewise-constant <-> weighted-threshold conversion.
+  bika.py        BiKA layers (training + hardware/CAC forms, saturating acc).
+  bnn.py         FINN-style binarized baseline (XNOR-popcount semantics).
+  qnn.py         8-bit QNN baseline (fake-quant + FINN-R threshold requant).
+  kan.py         B-spline KAN baseline (pykan functional form in JAX).
+  convert.py     KAN -> m-threshold / BiKA -> int8 hardware conversions.
+"""
+from . import bika, bnn, convert, kan, qnn, ste, thresholds
+from .bika import (
+    BikaConfig,
+    bika_conv2d_apply,
+    bika_conv2d_init,
+    bika_linear_apply,
+    bika_linear_init,
+    bika_matmul,
+    bika_matmul_hw,
+    saturating_accumulate,
+    to_hardware,
+)
+from .ste import clip_ste, round_ste, sign, sign_ste
+
+__all__ = [
+    "bika",
+    "bnn",
+    "convert",
+    "kan",
+    "qnn",
+    "ste",
+    "thresholds",
+    "BikaConfig",
+    "bika_conv2d_apply",
+    "bika_conv2d_init",
+    "bika_linear_apply",
+    "bika_linear_init",
+    "bika_matmul",
+    "bika_matmul_hw",
+    "saturating_accumulate",
+    "to_hardware",
+    "clip_ste",
+    "round_ste",
+    "sign",
+    "sign_ste",
+]

@@ -1,0 +1,493 @@
+"""BiKA layers (paper §II-B/C): multiply-free threshold networks.
+
+Training form (what ``BiKALinear`` trains, Fig. 7):
+
+    y[b, n] = sum_k SignSTE( x[b, k] * w[k, n] + beta[k, n] )
+
+i.e. every edge (k, n) owns a weight *and its own bias*; Sign of the
+pre-activation is a learnable threshold on x:  Sign(w x + beta) =
+sign(w) * Sign(x - tau) with tau = -beta / w  (Eq. 8).
+
+Hardware/inference form (what the CAC systolic array executes):
+
+    y[b, n] = sum_k s[k, n] * Sign(x[b, k] - tau[k, n])
+
+with s in {-1, +1} (1 bit) and tau an int8 threshold: 9 bits per edge.
+The accumulator is an int8 with saturation ("sum limitation", §III-B);
+``hw_exact=True`` reproduces that bit-exactly.
+
+``bika_matmul`` (training) supports three memory regimes:
+  * chunk=None — single fused broadcast-compare-reduce; XLA keeps the (B,K,N)
+    intermediate inside a loop fusion, which is what the multi-pod dry-run lowers.
+  * chunk=int  — lax.scan over K-chunks, guaranteeing O(B*chunk*N) live memory
+    (the XLA analogue of streaming activations through the systolic array).
+  * kernels/cac_matmul.py — the Pallas TPU kernel (VMEM-tiled), used on-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ste import sign, sign_ste
+
+__all__ = [
+    "BikaConfig",
+    "bika_matmul",
+    "bika_matmul_cvjp",
+    "bika_matmul_hw",
+    "bika_matmul_hw_tiled",
+    "bika_linear_init",
+    "bika_linear_apply",
+    "bika_conv2d_init",
+    "bika_conv2d_apply",
+    "to_hardware",
+    "quantize_thresholds",
+    "saturating_accumulate",
+]
+
+ACC_LO, ACC_HI = -128, 127  # 8-bit accumulator range (paper §III-B)
+
+
+@dataclasses.dataclass(frozen=True)
+class BikaConfig:
+    """Per-layer BiKA options.
+
+    m:       thresholds per edge (paper's quantization parameter; 1 = BiKA).
+    chunk:   K-chunk size for the scan path (None = fused broadcast).
+    out_scale: 'none'   -> raw integer-valued sum (paper networks),
+               'rsqrt_k' -> y / sqrt(m*K) (LM integration; keeps activations O(1)).
+    hw_exact: emulate the saturating int8 accumulator in the forward pass.
+    """
+
+    m: int = 1
+    chunk: Optional[int] = None
+    out_scale: str = "none"
+    hw_exact: bool = False
+
+
+def _edge_sum(x: jax.Array, w: jax.Array, beta: jax.Array) -> jax.Array:
+    """sum_k SignSTE(x[..., k] * w[k, n] + beta[k, n]) — fused broadcast form."""
+    pre = x[..., :, None] * w + beta  # (..., K, N) — stays inside an XLA fusion
+    return jnp.sum(sign_ste(pre), axis=-2)
+
+
+def bika_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    beta: jax.Array,
+    *,
+    chunk: Optional[int] = None,
+) -> jax.Array:
+    """Training-form BiKA contraction. x: (..., K); w, beta: (K, N) -> (..., N)."""
+    k = x.shape[-1]
+    assert w.shape[0] == k and beta.shape == w.shape, (x.shape, w.shape, beta.shape)
+    if chunk is None or chunk >= k:
+        return _edge_sum(x, w, beta)
+
+    n_chunks = -(-k // chunk)
+    pad = n_chunks * chunk - k
+    if pad:
+        # Pad with w=0, beta=+1 so each padded edge contributes a constant +1,
+        # subtracted again after the scan.
+        xp = jnp.concatenate([x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+        wp = jnp.concatenate([w, jnp.zeros((pad,) + w.shape[1:], w.dtype)], axis=0)
+        bp = jnp.concatenate([beta, jnp.ones((pad,) + beta.shape[1:], beta.dtype)], axis=0)
+    else:
+        xp, wp, bp = x, w, beta
+    xs = jnp.moveaxis(xp.reshape(x.shape[:-1] + (n_chunks, chunk)), -2, 0)
+    ws = wp.reshape(n_chunks, chunk, -1)
+    bs = bp.reshape(n_chunks, chunk, -1)
+
+    def body(acc, args):
+        xc, wc, bc = args
+        return acc + _edge_sum(xc, wc, bc), None
+
+    init = jnp.zeros(x.shape[:-1] + (w.shape[-1],), x.dtype)
+    acc, _ = jax.lax.scan(body, init, (xs, ws, bs))
+    if pad:
+        acc = acc - jnp.asarray(pad, acc.dtype)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Tiled CAC with custom VJP — the XLA rendition of the Pallas kernel's
+# (mc x kc x N) VMEM tiling. Live memory is bounded by TILE_BUDGET elements
+# regardless of problem size (CPU/TPU backends materialize the broadcast-
+# compare intermediate of the fused form; at LM scale that is TBs). The
+# nested-scan schedule writes dx / dw / dbeta / y tiles exactly once (scan
+# ys), so the only re-reads are the w/beta tiles per M-block — the same
+# traffic pattern as the weight-stationary kernel.
+# ---------------------------------------------------------------------------
+
+TILE_BUDGET = 1 << 26  # elements live in one (mc, kc, N) tile
+
+
+def _tile_sizes(m: int, k: int, n: int, budget: int = TILE_BUDGET) -> Tuple[int, int]:
+    """mc = kc = sqrt(budget / n), snapped to divisors-via-padding."""
+    per = max(budget // max(n, 1), 1)
+    t = max(int(per**0.5), 1)
+    return min(t, m), min(t, k)
+
+
+def _pad_to(a: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    pad = (-a.shape[axis]) % mult
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _cac_fwd_tiled(x, w, beta, mc, kc):
+    """y[m,n] = sum_k Sign(x w + beta), (mc, kc)-tiled. Shapes pre-padded."""
+    m, k = x.shape
+    n = w.shape[1]
+    nm, nk = m // mc, k // kc
+    xb = jnp.moveaxis(x.reshape(nm, mc, nk, kc), 2, 1)  # (nm, nk, mc, kc)
+    wb = w.reshape(nk, kc, n)
+    bb = beta.reshape(nk, kc, n)
+
+    def outer(_, xm):  # xm: (nk, mc, kc)
+        def inner(acc, args):
+            xc, wc, bc = args
+            pre = xc[:, :, None] * wc[None] + bc[None]
+            return acc + jnp.sum(jnp.where(pre >= 0, 1.0, -1.0), axis=1), None
+
+        acc0 = jnp.zeros((mc, n), jnp.float32)
+        ym, _ = jax.lax.scan(inner, acc0, (xm, wb, bb))
+        return None, ym
+
+    _, yb = jax.lax.scan(outer, None, xb)  # (nm, mc, n)
+    return yb.reshape(m, n)
+
+
+def _cac_bwd_tiled(x, w, beta, g, mc, kc):
+    """STE backward, (mc, kc)-tiled; every output tile written once."""
+    m, k = x.shape
+    n = w.shape[1]
+    nm, nk = m // mc, k // kc
+    xb = jnp.moveaxis(x.reshape(nm, mc, nk, kc), 2, 0)  # (nk, nm, mc, kc)
+    gb = g.reshape(nm, mc, n)
+    wb = w.reshape(nk, kc, n)
+    bb = beta.reshape(nk, kc, n)
+
+    def outer_k(_, args):
+        xk, wc, bc = args  # (nm, mc, kc), (kc, n), (kc, n)
+
+        def inner_m(carry, margs):
+            dw_acc, db_acc = carry
+            xc, gc = margs  # (mc, kc), (mc, n)
+            pre = xc[:, :, None] * wc[None] + bc[None]
+            gm = jnp.where(jnp.abs(pre) <= 1.0, gc[:, None, :], 0.0)  # (mc,kc,n)
+            dxc = jnp.sum(gm * wc[None], axis=2)  # (mc, kc)
+            dw_acc = dw_acc + jnp.sum(gm * xc[:, :, None], axis=0)
+            db_acc = db_acc + jnp.sum(gm, axis=0)
+            return (dw_acc, db_acc), dxc
+
+        z = jnp.zeros((kc, n), jnp.float32)
+        (dwc, dbc), dxk = jax.lax.scan(inner_m, (z, z), (xk, gb))
+        return None, (dwc, dbc, dxk)  # dxk: (nm, mc, kc)
+
+    _, (dw, db, dx) = jax.lax.scan(outer_k, None, (xb, wb, bb))
+    dx = jnp.moveaxis(dx, 0, 1).reshape(nm, mc, nk * kc).reshape(m, k)
+    return dx, dw.reshape(k, n), db.reshape(k, n)
+
+
+def _small(m, k, n):
+    return m * k * n <= TILE_BUDGET
+
+
+def _bwd_fused(x, w, beta, g):
+    pre = x[:, :, None] * w[None] + beta[None]
+    mask = (jnp.abs(pre) <= 1.0).astype(g.dtype)
+    gm = g[:, None, :] * mask  # stays inside the reduce fusions
+    dx = jnp.sum(gm * w[None].astype(g.dtype), axis=2)
+    dw = jnp.sum(gm * x[:, :, None].astype(g.dtype), axis=0)
+    dbeta = jnp.sum(gm, axis=0)
+    return dx, dw, dbeta
+
+
+@jax.custom_vjp
+def _bika_matmul_cvjp2d(x: jax.Array, w: jax.Array, beta: jax.Array) -> jax.Array:
+    return _edge_sum(x, w, beta)
+
+
+def _bika_cvjp_fwd(x, w, beta):
+    return _edge_sum(x, w, beta), (x, w, beta)
+
+
+def _bika_cvjp_bwd(res, g):
+    """STE backward saving only (x, w, beta): the (M, K, N) hard-tanh mask is
+    recomputed inside three reduce fusions — never written to HBM on TPU
+    (the Pallas kernel in kernels/cac_matmul.py is the explicit form of the
+    same schedule; the CPU backend materializes fusion interiors, which is an
+    emulation artifact documented in EXPERIMENTS.md §Dry-run)."""
+    x, w, beta = res
+    dx, dw, dbeta = _bwd_fused(x, w, beta, g.astype(jnp.float32))
+    return dx.astype(x.dtype), dw.astype(w.dtype), dbeta.astype(beta.dtype)
+
+
+_bika_matmul_cvjp2d.defvjp(_bika_cvjp_fwd, _bika_cvjp_bwd)
+
+
+@jax.custom_vjp
+def _bika_matmul_cvjp2d_tiled(x: jax.Array, w: jax.Array, beta: jax.Array) -> jax.Array:
+    return _cvjp_tiled_fwd_impl(x, w, beta)
+
+
+def _cvjp_tiled_fwd_impl(x, w, beta):
+    m, k = x.shape
+    n = w.shape[1]
+    if _small(m, k, n):
+        return _edge_sum(x, w, beta)
+    mc, kc = _tile_sizes(m, k, n)
+    xp = _pad_to(x, 0, mc)
+    xp = _pad_to(xp, 1, kc)
+    wp = _pad_to(w, 0, kc)
+    bp = _pad_to(beta, 0, kc)
+    kpad = xp.shape[1] - k
+    y = _cac_fwd_tiled(xp, wp, bp, mc, kc)[:m]
+    # padded K rows contribute Sign(0) = +1 each
+    return (y - jnp.float32(kpad)) if kpad else y
+
+
+def _bika_cvjp_tiled_fwd(x, w, beta):
+    return _cvjp_tiled_fwd_impl(x, w, beta), (x, w, beta)
+
+
+def _bika_cvjp_tiled_bwd(res, g):
+    x, w, beta = res
+    m, k = x.shape
+    n = w.shape[1]
+    g = g.astype(jnp.float32)
+    if _small(m, k, n):
+        dx, dw, dbeta = _bwd_fused(x, w, beta, g)
+    else:
+        mc, kc = _tile_sizes(m, k, n)
+        xp = _pad_to(x, 0, mc)
+        xp = _pad_to(xp, 1, kc)
+        wp = _pad_to(w, 0, kc)
+        bp = _pad_to(beta, 0, kc)
+        gp = _pad_to(g, 0, mc)
+        # padded rows/cols: x=0, g=0 there -> gradients vanish; slice after
+        dx, dw, dbeta = _cac_bwd_tiled(xp, wp, bp, gp, mc, kc)
+        dx, dw, dbeta = dx[:m, :k], dw[:k], dbeta[:k]
+    return dx.astype(x.dtype), dw.astype(w.dtype), dbeta.astype(beta.dtype)
+
+
+_bika_matmul_cvjp2d_tiled.defvjp(_bika_cvjp_tiled_fwd, _bika_cvjp_tiled_bwd)
+
+
+def bika_matmul_cvjp(x: jax.Array, w: jax.Array, beta: jax.Array, *,
+                     tiled: bool = False) -> jax.Array:
+    """Training-form BiKA with a custom VJP (only (x, w, beta) residuals).
+
+    Numerically identical to ``bika_matmul`` (same Sign/STE semantics).
+    ``tiled=False`` (default) keeps the compare-reduce as one fusion — the
+    TPU-ideal schedule the Pallas kernel implements explicitly, and what the
+    dry-run lowers. ``tiled=True`` additionally bounds *CPU-backend* live
+    memory with an explicit (mc, kc) scan schedule; note the scan's tile axis
+    cannot be sharded by GSPMD, so use it for single-host/debug runs only.
+    """
+    lead = x.shape[:-1]
+    op = _bika_matmul_cvjp2d_tiled if tiled else _bika_matmul_cvjp2d
+    y = op(x.reshape(-1, x.shape[-1]), w, beta)
+    return y.reshape(lead + (w.shape[-1],)).astype(x.dtype)
+
+
+def bika_matmul_hw_tiled(x: jax.Array, tau: jax.Array, s: jax.Array) -> jax.Array:
+    """Serving-form CAC with (mc, kc)-tiling (int8-friendly comparator path);
+    falls back to the fused bika_matmul_hw for small problems."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    m, k = x2.shape
+    n = tau.shape[1]
+    if _small(m, k, n):
+        y = bika_matmul_hw(x2, tau, s, clamp=False, acc_dtype=jnp.float32)
+        return y.reshape(lead + (n,))
+    mc, kc = _tile_sizes(m, k, n)
+    xp = _pad_to(x2, 0, mc)
+    xp = _pad_to(xp, 1, kc)
+    taup = _pad_to(tau.astype(jnp.float32), 0, kc)
+    sp = _pad_to(s.astype(jnp.float32), 0, kc, value=0.0)  # s=0 pad: zero contribution
+    nm, nk = xp.shape[0] // mc, xp.shape[1] // kc
+    xb = jnp.moveaxis(xp.reshape(nm, mc, nk, kc), 2, 1)
+    tb = taup.reshape(nk, kc, n)
+    sb = sp.reshape(nk, kc, n)
+
+    def outer(_, xm):
+        def inner(acc, args):
+            xc, tc, sc = args
+            cmp = xc[:, :, None] >= tc[None]
+            return acc + jnp.sum(jnp.where(cmp, sc[None], -sc[None]), axis=1), None
+
+        acc0 = jnp.zeros((mc, n), jnp.float32)
+        ym, _ = jax.lax.scan(inner, acc0, (xm, tb, sb))
+        return None, ym
+
+    _, yb = jax.lax.scan(outer, None, xb)
+    return yb.reshape(xp.shape[0], n)[:m].reshape(lead + (n,))
+
+
+def saturating_accumulate(terms: jax.Array, lo: int = ACC_LO, hi: int = ACC_HI) -> jax.Array:
+    """Hardware-exact running sum with per-step saturation over axis 0.
+
+    terms: (K, ...) integer-valued array; returns the final accumulator value.
+    This is the "sum limitation" accumulator of the 8-bit BiKA PE.
+    """
+
+    def body(acc, t):
+        return jnp.clip(acc + t, lo, hi), None
+
+    acc0 = jnp.zeros(terms.shape[1:], terms.dtype)
+    acc, _ = jax.lax.scan(body, acc0, terms)
+    return acc
+
+
+def bika_matmul_hw(
+    x: jax.Array,
+    tau: jax.Array,
+    s: jax.Array,
+    *,
+    hw_exact: bool = False,
+    clamp: bool = True,
+    acc_dtype=jnp.int32,
+) -> jax.Array:
+    """Hardware-form CAC contraction: y[b,n] = sum_k s[k,n]*Sign(x[b,k]-tau[k,n]).
+
+    Implemented as a pure comparator (``x >= tau``, never a subtraction) so it
+    is overflow-safe for int8 inputs/thresholds and mirrors the PE datapath.
+
+    With ``hw_exact`` the accumulation saturates at int8 bounds after every
+    input (bit-faithful to the FPGA PE); otherwise a wide accumulator is used
+    and only the final sum is clamped (the paper notes sums rarely leave
+    [-128, 127], which tests exploit to check the two paths agree).
+    ``clamp=False`` disables the 8-bit range entirely — the LM-scale serving
+    path, where K >> 127 and the accumulator is int32.
+    """
+    one = jnp.asarray(1, acc_dtype)
+    cmp = jnp.where(x[..., :, None] >= tau, one, -one)  # (..., K, N)
+    terms = cmp * s.astype(acc_dtype)
+    if hw_exact:
+        terms = jnp.moveaxis(terms, -2, 0)  # (K, ..., N)
+        return saturating_accumulate(terms)
+    acc = jnp.sum(terms, axis=-2)
+    return jnp.clip(acc, ACC_LO, ACC_HI) if clamp else acc
+
+
+# ---------------------------------------------------------------------------
+# Layer init / apply (training form, m thresholds per edge)
+# ---------------------------------------------------------------------------
+
+
+def bika_linear_init(key: jax.Array, k: int, n: int, m: int = 1, dtype=jnp.float32):
+    """PyTorch-Linear-style uniform init for (w, beta), each (m, K, N)."""
+    bound = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
+    kw, kb = jax.random.split(key)
+    w = jax.random.uniform(kw, (m, k, n), dtype, -bound, bound)
+    beta = jax.random.uniform(kb, (m, k, n), dtype, -bound, bound)
+    return {"w": w, "beta": beta}
+
+
+def _apply_out_scale(y: jax.Array, m: int, k: int, out_scale: str) -> jax.Array:
+    if out_scale == "none":
+        return y
+    if out_scale == "rsqrt_k":
+        return y / jnp.sqrt(jnp.asarray(m * k, y.dtype))
+    raise ValueError(f"unknown out_scale {out_scale!r}")
+
+
+def bika_linear_apply(params, x: jax.Array, cfg: BikaConfig = BikaConfig()) -> jax.Array:
+    w, beta = params["w"], params["beta"]
+    m, k, _ = w.shape
+    if cfg.hw_exact:
+        tau, s = to_hardware(w, beta)
+        ys = [bika_matmul_hw(x, tau[j], s[j], hw_exact=True) for j in range(m)]
+        y = sum(ys).astype(x.dtype)
+    else:
+        y = sum(bika_matmul(x, w[j], beta[j], chunk=cfg.chunk) for j in range(m))
+    return _apply_out_scale(y, m, k, cfg.out_scale)
+
+
+def bika_conv2d_init(
+    key: jax.Array, c_in: int, c_out: int, kh: int = 3, kw: int = 3, m: int = 1, dtype=jnp.float32
+):
+    return bika_linear_init(key, c_in * kh * kw, c_out, m, dtype)
+
+
+def bika_conv2d_apply(
+    params,
+    x: jax.Array,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    padding: str = "SAME",
+    cfg: BikaConfig = BikaConfig(),
+) -> jax.Array:
+    """BiKAConv2d via im2col: x (B, H, W, C) -> (B, H', W', C_out).
+
+    Each patch element gets its own threshold — the conv analogue of the
+    per-edge bias in BiKALinear (paper trains BiKAConv2d the same way).
+    """
+    c_out = params["w"].shape[-1]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (B, H', W', C*kh*kw)
+    b, ho, wo, kdim = patches.shape
+    y = bika_linear_apply(
+        {"w": params["w"], "beta": params["beta"]}, patches.reshape(b * ho * wo, kdim), cfg
+    )
+    return y.reshape(b, ho, wo, c_out)
+
+
+# ---------------------------------------------------------------------------
+# Export to hardware form
+# ---------------------------------------------------------------------------
+
+_W_EPS = 1e-8
+_ALWAYS_FIRE = -1e9  # tau for degenerate w == 0 edges: Sign(beta) regardless of x
+
+
+def to_hardware(w: jax.Array, beta: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(w, beta) -> (tau, s): Sign(w*x + beta) == s * Sign(x - tau)  (Eq. 8).
+
+    For w > 0:  fires when x >= -beta/w, s = +1.
+    For w < 0:  Sign(wx+beta) = +1 iff x <= -beta/w; we encode that as
+                s = -1 with a strict threshold nudged so the boundary point
+                (wx+beta == 0 -> +1) is preserved under float comparison.
+    For w == 0: constant Sign(beta): s = Sign(beta), tau = -inf (always fires).
+    """
+    w = jnp.asarray(w)
+    beta = jnp.asarray(beta)
+    safe_w = jnp.where(jnp.abs(w) < _W_EPS, 1.0, w)
+    tau_raw = -beta / safe_w
+    # w<0: Sign(wx+beta)>=0 iff x <= tau; equivalently -Sign(x - nextafter(tau))
+    tau_neg = jnp.nextafter(tau_raw.astype(jnp.float32), jnp.inf).astype(tau_raw.dtype)
+    tau = jnp.where(w > 0, tau_raw, tau_neg)
+    s = jnp.where(w > 0, 1.0, -1.0)
+    degenerate = jnp.abs(w) < _W_EPS
+    tau = jnp.where(degenerate, _ALWAYS_FIRE, tau)
+    s = jnp.where(degenerate, sign(beta), s).astype(w.dtype)
+    return tau.astype(w.dtype), s
+
+
+def quantize_thresholds(
+    tau: jax.Array, x_scale: float, bits: int = 8
+) -> Tuple[jax.Array, float]:
+    """Quantize float thresholds onto the int grid of the (already int) input.
+
+    If activations are integers a_int = round(x / x_scale), then
+    Sign(x - tau) == Sign(a_int - ceil(tau / x_scale)) for tau on-grid;
+    we round and clamp to the int{bits} range. Returns (tau_int int8, x_scale).
+    """
+    lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+    tau_int = jnp.clip(jnp.round(tau / x_scale), lo, hi).astype(jnp.int8)
+    return tau_int, x_scale

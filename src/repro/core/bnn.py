@@ -1,0 +1,68 @@
+"""FINN-style binarized layers — the paper's primary hardware baseline.
+
+Training form: latent real weights binarized with SignSTE; activations
+binarized with SignSTE; hidden nonlinearity = learnable threshold on the
+integer popcount sum (FINN folds batch-norm into this threshold — we train
+the threshold directly).
+
+Hardware form: bits x_hat = (x+1)/2 in {0,1}; the +/-1 dot product equals
+
+    dot(x, w) = K - 2 * popcount(XOR(x_hat, w_hat))
+              = 2 * popcount(XNOR(x_hat, w_hat)) - K
+
+which is what the BNN PE computes (XNOR + PopCount, Fig. 8). The Pallas
+kernel (kernels/bnn_matmul.py) implements the packed-uint32 version; here we
+keep the reference semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ste import sign, sign_ste
+
+__all__ = [
+    "binarize",
+    "bnn_matmul",
+    "bnn_linear_init",
+    "bnn_linear_apply",
+    "xnor_popcount_dot",
+]
+
+
+def binarize(x: jax.Array) -> jax.Array:
+    """SignSTE binarization to {-1, +1}."""
+    return sign_ste(x)
+
+
+def bnn_matmul(xb: jax.Array, wb: jax.Array) -> jax.Array:
+    """Integer-valued +/-1 contraction (the XNOR-popcount sum)."""
+    return xb @ wb
+
+
+def xnor_popcount_dot(x_bits: jax.Array, w_bits: jax.Array) -> jax.Array:
+    """Hardware formulation on {0,1} bits: 2*popcount(XNOR) - K.
+
+    x_bits: (..., K) uint; w_bits: (K, N) uint — reference for the packed kernel.
+    """
+    k = x_bits.shape[-1]
+    xnor = 1 - jnp.bitwise_xor(x_bits[..., :, None], w_bits)  # (..., K, N)
+    return 2 * jnp.sum(xnor, axis=-2) - k
+
+
+def bnn_linear_init(key: jax.Array, k: int, n: int, dtype=jnp.float32):
+    bound = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
+    w = jax.random.uniform(key, (k, n), dtype, -bound, bound)
+    return {"w": w, "thresh": jnp.zeros((n,), dtype)}
+
+
+def bnn_linear_apply(params, x: jax.Array, *, binarize_input: bool = True,
+                     activation: bool = True) -> jax.Array:
+    """One BNN layer. With activation=True returns +/-1 activations
+    (Sign(popcount_sum - thresh)); otherwise the raw integer sum (logit layer)."""
+    xb = binarize(x) if binarize_input else x
+    wb = binarize(params["w"])
+    pre = bnn_matmul(xb, wb)
+    if not activation:
+        return pre
+    return sign_ste(pre - params["thresh"])

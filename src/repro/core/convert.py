@@ -1,0 +1,105 @@
+"""Conversions between network families (paper Figs. 2-6).
+
+* KAN edge functions -> m-threshold form (the paper's approximation pipeline):
+  sample each B-spline edge to a t-slot piecewise-constant function, apply the
+  Eq. 7 closed form, quantize the alpha weights to a shared integer budget m,
+  and expand into unit thresholds. m = 1 recovers the BiKA edge.
+
+* BiKA training form (w, beta) -> hardware form (tau int8, s 1-bit) with an
+  input-scale-aware integer threshold grid — what the accelerator loads.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kan as kan_mod
+from . import thresholds as thr
+from .bika import quantize_thresholds, to_hardware
+
+__all__ = [
+    "kan_layer_to_thresholds",
+    "threshold_layer_apply",
+    "bika_params_to_hw_int8",
+    "approximation_error",
+]
+
+
+def kan_layer_to_thresholds(
+    kan_params: Dict,
+    *,
+    t_slots: int = 16,
+    m: int = 4,
+    grid: int = 5,
+    order: int = 3,
+    lo: float = -1.0,
+    hi: float = 1.0,
+) -> Dict:
+    """Convert every KAN edge function into exactly m unit thresholds.
+
+    Returns {'tau': (m, K, N), 's': (m, K, N), 'scale': (K, N)} such that
+
+        phi_{k,n}(x) ~= scale[k,n] * sum_j s[j,k,n] * Sign(x - tau[j,k,n]).
+
+    scale is the per-edge magnitude removed by the integer quantization; on
+    hardware the paper unifies it by choosing even-integer output deltas —
+    we keep it explicit so approximation error is measurable (Fig. 5-6).
+    """
+    k_in, n_out = kan_params["w_base"].shape
+    taus = np.zeros((m, k_in, n_out), np.float32)
+    signs = np.zeros((m, k_in, n_out), np.float32)
+    scales = np.zeros((k_in, n_out), np.float32)
+
+    # Vectorized sampling of all edge functions at slot midpoints.
+    edges = jnp.linspace(lo, hi, t_slots + 1)
+    boundaries = np.asarray(edges[:-1])
+    mids = (edges[:-1] + edges[1:]) / 2.0
+    basis = kan_mod.bspline_basis(mids, lo, hi, grid, order)  # (t, G+k)
+    spline = jnp.einsum("tg,kng->tkn", basis, kan_params["coef"])
+    base = jax.nn.silu(mids)[:, None, None] * kan_params["w_base"][None]
+    outputs = np.asarray(spline + base)  # (t, K, N) = O_i per edge
+
+    for ki in range(k_in):
+        for ni in range(n_out):
+            alphas = thr.pwc_to_alphas(jnp.asarray(outputs[:, ki, ni]))
+            total = float(jnp.abs(alphas).sum())
+            if total == 0.0:
+                continue
+            int_alphas = thr.quantize_alphas(alphas, m)
+            tau_e, s_e = thr.expand_unit_thresholds(boundaries, int_alphas)
+            cnt = min(m, tau_e.shape[0])
+            taus[:cnt, ki, ni] = np.asarray(tau_e)[:cnt]
+            signs[:cnt, ki, ni] = np.asarray(s_e)[:cnt]
+            scales[ki, ni] = total / m
+    return {"tau": jnp.asarray(taus), "s": jnp.asarray(signs), "scale": jnp.asarray(scales)}
+
+
+def threshold_layer_apply(tparams: Dict, x: jax.Array) -> jax.Array:
+    """Evaluate the converted layer: y[..., n] = sum_k scale*sum_j s*Sign(x-tau)."""
+    from .ste import sign
+
+    tau, s, scale = tparams["tau"], tparams["s"], tparams["scale"]
+    cmp = sign(x[..., None, :, None] - tau)  # (..., m, K, N)
+    edge = jnp.sum(s * cmp, axis=-3) * scale  # (..., K, N)
+    return jnp.sum(edge, axis=-2)
+
+
+def bika_params_to_hw_int8(
+    params: Dict, x_scale: float
+) -> Tuple[jax.Array, jax.Array, float]:
+    """BiKA (w, beta) -> int8 thresholds + 1-bit signs for the CAC array."""
+    tau, s = to_hardware(params["w"], params["beta"])
+    tau_int, _ = quantize_thresholds(tau, x_scale)
+    return tau_int, s.astype(jnp.int8), x_scale
+
+
+def approximation_error(
+    fn, tau: jax.Array, s: jax.Array, scale: float, lo: float, hi: float, n: int = 2048
+) -> float:
+    """RMS error of the threshold approximation of a scalar function."""
+    x = jnp.linspace(lo, hi, n, endpoint=False)
+    approx = scale * thr.threshold_sum(x, tau, s)
+    return float(jnp.sqrt(jnp.mean((fn(x) - approx) ** 2)))

@@ -1,0 +1,89 @@
+"""B-spline KAN layer — the accuracy baseline the paper compares against
+(Table II reproduces KAN with pykan; we implement the same functional form
+in pure JAX: per-edge learnable function = base-weight * silu(x) + spline).
+
+Also the *source* side of the paper's core conversion: a trained KAN edge
+function is sampled to a piecewise-constant function and rewritten exactly as
+a weighted-threshold sum (core/thresholds.py), then quantized to m unit
+thresholds (core/convert.py) — Fig. 3-6.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "bspline_basis",
+    "kan_linear_init",
+    "kan_linear_apply",
+    "kan_edge_fn",
+]
+
+
+def _extended_grid(lo: float, hi: float, grid: int, k: int) -> jnp.ndarray:
+    h = (hi - lo) / grid
+    return jnp.arange(-k, grid + k + 1) * h + lo  # grid + 2k + 1 knots
+
+
+def bspline_basis(x: jax.Array, lo: float, hi: float, grid: int, order: int) -> jax.Array:
+    """Cox-de Boor B-spline basis. x: (...,) -> (..., grid + order) basis values."""
+    k = order
+    t = _extended_grid(lo, hi, grid, k)
+    x = x[..., None]
+    # degree-0: indicator of knot interval
+    b = ((x >= t[:-1]) & (x < t[1:])).astype(x.dtype)  # (..., grid+2k)
+    for d in range(1, k + 1):
+        left_num = x - t[: -(d + 1)]
+        left_den = t[d:-1] - t[: -(d + 1)]
+        right_num = t[d + 1 :] - x
+        right_den = t[d + 1 :] - t[1:-d]
+        left = jnp.where(left_den > 0, left_num / left_den, 0.0) * b[..., :-1]
+        right = jnp.where(right_den > 0, right_num / right_den, 0.0) * b[..., 1:]
+        b = left + right
+    return b  # (..., grid + k)
+
+
+def kan_linear_init(
+    key: jax.Array,
+    k_in: int,
+    n_out: int,
+    *,
+    grid: int = 5,
+    order: int = 3,
+    lo: float = -1.0,
+    hi: float = 1.0,
+    dtype=jnp.float32,
+):
+    kc, kb = jax.random.split(key)
+    n_basis = grid + order
+    coef = jax.random.normal(kc, (k_in, n_out, n_basis), dtype) * 0.1
+    w_base = jax.random.normal(kb, (k_in, n_out), dtype) / jnp.sqrt(
+        jnp.asarray(k_in, jnp.float32)
+    )
+    return {"coef": coef, "w_base": w_base}
+
+
+def kan_linear_apply(
+    params, x: jax.Array, *, grid: int = 5, order: int = 3, lo: float = -1.0, hi: float = 1.0
+) -> jax.Array:
+    """y[..., n] = sum_k [ w_base[k,n]*silu(x_k) + sum_g coef[k,n,g]*B_g(x_k) ]."""
+    basis = bspline_basis(x, lo, hi, grid, order)  # (..., K, G+k)
+    spline = jnp.einsum("...kg,kng->...n", basis, params["coef"])
+    base = jax.nn.silu(x) @ params["w_base"]
+    return base + spline
+
+
+def kan_edge_fn(
+    params, k_idx: int, n_idx: int, *, grid: int = 5, order: int = 3, lo: float = -1.0, hi: float = 1.0
+):
+    """Return the scalar edge function phi_{k,n}(x) for conversion/plotting."""
+    coef = params["coef"][k_idx, n_idx]
+    wb = params["w_base"][k_idx, n_idx]
+
+    def fn(x: jax.Array) -> jax.Array:
+        basis = bspline_basis(x, lo, hi, grid, order)
+        return wb * jax.nn.silu(x) + basis @ coef
+
+    return fn

@@ -1,0 +1,120 @@
+"""8-bit QNN layers (FINN-R style) — the paper's second hardware baseline.
+
+Training: symmetric per-output-channel weight fake-quant + PACT-style
+learnable activation clipping, both with round-STE.
+
+Hardware/inference: integer matmul with int32 accumulation followed by
+*threshold requantization*: FINN-R shows any monotone activation+quantizer is
+expressible as 2^n - 1 threshold comparisons on the accumulator; the QNN PE in
+the paper evaluates them serially through one comparator (Fig. 8/9). We
+implement both that threshold form and the arithmetic round/clip form, and
+property-test their equality.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .ste import clip_ste, round_ste
+
+__all__ = [
+    "quantize_weights",
+    "fake_quant_weights",
+    "fake_quant_activations",
+    "qnn_linear_init",
+    "qnn_linear_apply",
+    "requant_scale",
+    "requant_arith",
+    "requant_thresholds",
+    "requant_threshold_form",
+]
+
+QMAX_W = 127  # int8 symmetric weights
+QMAX_A = 255  # uint8 activations
+
+
+def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-channel symmetric int8 quantization. Returns (w_int, scale)."""
+    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / QMAX_W
+    scale = jnp.maximum(scale, 1e-12)
+    w_int = jnp.clip(jnp.round(w / scale), -QMAX_W, QMAX_W).astype(jnp.int8)
+    return w_int, scale
+
+
+def fake_quant_weights(w: jax.Array) -> jax.Array:
+    scale = jnp.max(jnp.abs(jax.lax.stop_gradient(w)), axis=0, keepdims=True) / QMAX_W
+    scale = jnp.maximum(scale, 1e-12)
+    return round_ste(jnp.clip(w / scale, -QMAX_W, QMAX_W)) * scale
+
+
+def fake_quant_activations(x: jax.Array, amax: jax.Array) -> jax.Array:
+    """uint8 fake-quant of ReLU-clipped activations (PACT): x in [0, amax]."""
+    amax = jnp.maximum(amax, 1e-6)
+    scale = amax / QMAX_A
+    x = clip_ste(x, 0.0, 1.0 * 10**9)  # ReLU with STE
+    x = jnp.minimum(x, amax)  # clip at learnable ceiling (grad flows to amax)
+    return round_ste(x / scale) * scale
+
+
+def qnn_linear_init(key: jax.Array, k: int, n: int, dtype=jnp.float32):
+    bound = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
+    kw, kb = jax.random.split(key)
+    return {
+        "w": jax.random.uniform(kw, (k, n), dtype, -bound, bound),
+        "b": jax.random.uniform(kb, (n,), dtype, -bound, bound),
+        "amax": jnp.asarray(6.0, dtype),  # PACT clip ceiling
+    }
+
+
+def qnn_linear_apply(params, x: jax.Array, *, quant_input: bool = True,
+                     activation: bool = True) -> jax.Array:
+    """Fake-quant training path. activation=False -> raw float pre-activation."""
+    if quant_input:
+        x = fake_quant_activations(x, params["amax"])
+    w = fake_quant_weights(params["w"])
+    pre = x @ w + params["b"]
+    if not activation:
+        return pre
+    return fake_quant_activations(pre, params["amax"])
+
+
+# ---------------------------------------------------------------------------
+# Integer inference path with FINN-R threshold requantization
+# ---------------------------------------------------------------------------
+
+
+def requant_scale(s_in: jax.Array, s_w: jax.Array, s_out: jax.Array) -> jax.Array:
+    """Combined requant multiplier M = s_in*s_w/s_out (per output channel)."""
+    return s_in * s_w / s_out
+
+
+def requant_arith(acc: jax.Array, mscale: jax.Array, bits: int = 8) -> jax.Array:
+    """Arithmetic requantization: clip(round_half_up(acc * M), 0, 2^bits-1).
+
+    Hardware requantizers (and the FINN-R threshold form below) implement
+    round-half-*up* = floor(x + 0.5), not IEEE round-half-to-even, so we use
+    the floor form here; jnp.round would disagree exactly on the .5 grid
+    (e.g. M = 0.5 puts every odd accumulator on a half boundary).
+    """
+    qmax = 2**bits - 1
+    return jnp.clip(jnp.floor(acc * mscale + 0.5), 0, qmax).astype(jnp.int32)
+
+
+def requant_thresholds(mscale: float, bits: int = 8) -> jnp.ndarray:
+    """FINN-R thresholds T_j, j=1..2^bits-1, such that
+
+        requant_arith(acc) == sum_j [acc >= T_j]
+
+    For round-half-away-from-zero on non-negative M: round(a*M) >= j iff
+    a*M >= j - 0.5 iff a >= (j - 0.5)/M; on an integer accumulator the
+    threshold is T_j = ceil((j - 0.5)/M).
+    """
+    j = jnp.arange(1, 2**bits)
+    return jnp.ceil((j - 0.5) / mscale).astype(jnp.int32)
+
+
+def requant_threshold_form(acc: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Serial-comparator requantization: count of passed thresholds."""
+    return jnp.sum(acc[..., None] >= thresholds, axis=-1).astype(jnp.int32)

@@ -1,0 +1,75 @@
+"""Straight-through estimators used by BiKA / BNN / QNN training.
+
+The paper (§II-B) replaces the backward pass of ``Sign`` with the derivative of
+hard-tanh: ``d Sign(x)/dx := 1[|x| <= 1]``. We expose that as ``sign_ste`` and a
+few relatives (round STE for QNN fake-quant, binary weight STE for BNN).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sign",
+    "sign_ste",
+    "round_ste",
+    "clip_ste",
+]
+
+
+def sign(x: jax.Array) -> jax.Array:
+    """Hardware Sign: +1 if x >= 0 else -1 (paper Eq. 8 — note >= at zero)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+@jax.custom_vjp
+def sign_ste(x: jax.Array) -> jax.Array:
+    return sign(x)
+
+
+def _sign_ste_fwd(x):
+    return sign(x), x
+
+
+def _sign_ste_bwd(x, g):
+    # hard-tanh derivative: pass-through inside [-1, 1], zero outside.
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_ste_fwd, _sign_ste_bwd)
+
+
+@jax.custom_vjp
+def round_ste(x: jax.Array) -> jax.Array:
+    """Round with identity gradient (standard fake-quant STE)."""
+    return jnp.round(x)
+
+
+def _round_ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _round_ste_bwd(_, g):
+    return (g,)
+
+
+round_ste.defvjp(_round_ste_fwd, _round_ste_bwd)
+
+
+@jax.custom_vjp
+def clip_ste(x: jax.Array, lo: float, hi: float) -> jax.Array:
+    """Clip whose gradient is identity inside the range, zero outside."""
+    return jnp.clip(x, lo, hi)
+
+
+def _clip_ste_fwd(x, lo, hi):
+    return jnp.clip(x, lo, hi), (x, lo, hi)
+
+
+def _clip_ste_bwd(res, g):
+    x, lo, hi = res
+    mask = ((x >= lo) & (x <= hi)).astype(g.dtype)
+    return (g * mask, None, None)
+
+
+clip_ste.defvjp(_clip_ste_fwd, _clip_ste_bwd)

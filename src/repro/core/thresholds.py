@@ -1,0 +1,151 @@
+"""Paper §II-A/§II-B: exact conversion between piecewise-constant functions and
+weighted-threshold sums (Eq. 1-7), plus the integer/m-threshold approximation.
+
+A piecewise-constant function on t slots ``[s_i, s_{i+1})`` with outputs ``O_i``
+is *exactly*
+
+    f(x) = sum_i alpha_i * Thres_{s_i}(x),   Thres_s(x) = +1 if x >= s else -1
+
+with the closed form (Eq. 7):
+
+    alpha_0 = (O_0 + O_{t-1}) / 2
+    alpha_i = (O_i - O_{i-1}) / 2          (1 <= i <= t-1)
+
+valid for x in [s_0, s_t).  Quantizing the alphas to integers with total weight
+m = sum |alpha_i| and expanding each weighted threshold into |alpha_i| unit
+thresholds (Fig. 4-5) gives the m-threshold approximation; m = 1 is BiKA.
+"""
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .ste import sign
+
+__all__ = [
+    "pwc_to_alphas",
+    "alphas_to_pwc",
+    "threshold_sum",
+    "eval_pwc",
+    "sample_to_pwc",
+    "quantize_alphas",
+    "expand_unit_thresholds",
+    "approximate_function",
+]
+
+
+def pwc_to_alphas(outputs: jax.Array) -> jax.Array:
+    """Eq. 7: slot outputs ``O_i`` (t,) -> threshold weights ``alpha_i`` (t,)."""
+    o = jnp.asarray(outputs)
+    a0 = (o[0] + o[-1]) / 2.0
+    rest = (o[1:] - o[:-1]) / 2.0
+    return jnp.concatenate([a0[None], rest])
+
+
+def alphas_to_pwc(alphas: jax.Array) -> jax.Array:
+    """Inverse of Eq. 7: ``O_i = 2 * cumsum(alpha)_i - sum(alpha)``.
+
+    Derivation: f'(x in slot i) = sum_{l<=i} alpha_l - sum_{r>i} alpha_r
+                                = 2 * cumsum(alpha)_i - sum(alpha).
+    """
+    a = jnp.asarray(alphas)
+    return 2.0 * jnp.cumsum(a) - jnp.sum(a)
+
+
+def threshold_sum(x: jax.Array, thresholds: jax.Array, alphas: jax.Array) -> jax.Array:
+    """f'(x) = sum_i alpha_i * Sign(x - s_i)  (Eq. 3). Broadcasts over x."""
+    x = jnp.asarray(x)
+    t = jnp.asarray(thresholds)
+    a = jnp.asarray(alphas)
+    return jnp.sum(a * sign(x[..., None] - t), axis=-1)
+
+
+def eval_pwc(x: jax.Array, boundaries: jax.Array, outputs: jax.Array) -> jax.Array:
+    """Evaluate the piecewise-constant f directly (Eq. 1) for the oracle side.
+
+    ``boundaries`` are the slot left-ends s_0..s_{t-1}; x must lie in [s_0, s_t).
+    """
+    idx = jnp.sum(x[..., None] >= jnp.asarray(boundaries), axis=-1) - 1
+    idx = jnp.clip(idx, 0, len(outputs) - 1)
+    return jnp.asarray(outputs)[idx]
+
+
+def sample_to_pwc(
+    fn: Callable[[jax.Array], jax.Array], lo: float, hi: float, t: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Discretize a continuous function into t slots on [lo, hi) (Eq. 1).
+
+    Returns (boundaries s_0..s_{t-1}, outputs O_0..O_{t-1}); each O_i is the
+    function value at the slot midpoint.
+    """
+    edges = jnp.linspace(lo, hi, t + 1)
+    boundaries = edges[:-1]
+    mids = (edges[:-1] + edges[1:]) / 2.0
+    return boundaries, fn(mids)
+
+
+def quantize_alphas(alphas: jax.Array, m: int) -> jax.Array:
+    """Quantize threshold weights to integers with total weight sum|a_int| == m.
+
+    Fig. 5-6: m is the unified quantization parameter; larger m = more unit
+    thresholds = closer approximation. Uses largest-remainder rounding so the
+    budget is hit exactly (when m >= number of nonzero alphas it distributes
+    leftover weight by remainder size).
+    """
+    a = np.asarray(alphas, dtype=np.float64)
+    total = np.abs(a).sum()
+    if total == 0:
+        return jnp.zeros_like(jnp.asarray(alphas))
+    scaled = a * (m / total)
+    base = np.trunc(scaled)
+    deficit = int(m - np.abs(base).sum())
+    if deficit > 0:
+        frac = np.abs(scaled) - np.abs(base)
+        order = np.argsort(-frac)
+        for j in order[:deficit]:
+            base[j] += np.sign(scaled[j]) if scaled[j] != 0 else 1.0
+    return jnp.asarray(base, dtype=jnp.asarray(alphas).dtype)
+
+
+def expand_unit_thresholds(
+    thresholds: jax.Array, int_alphas: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Fig. 4: one weighted threshold (s_i, alpha_i) -> |alpha_i| unit thresholds.
+
+    Returns (taus, signs) with len == sum |alpha_i| == m; the order of unit
+    thresholds does not affect the sum (paper's mixing argument, Fig. 5).
+    """
+    t = np.asarray(thresholds)
+    a = np.asarray(int_alphas).astype(np.int64)
+    taus, signs = [], []
+    for ti, ai in zip(t, a):
+        for _ in range(abs(int(ai))):
+            taus.append(float(ti))
+            signs.append(1.0 if ai > 0 else -1.0)
+    if not taus:  # degenerate all-zero function
+        taus, signs = [0.0], [0.0]
+    return jnp.asarray(taus), jnp.asarray(signs)
+
+
+def approximate_function(
+    fn: Callable[[jax.Array], jax.Array], lo: float, hi: float, t: int, m: int
+) -> Tuple[jax.Array, jax.Array, float]:
+    """Full §II pipeline: continuous fn -> t-slot PWC -> Eq.7 alphas ->
+    integer m-budget -> unit thresholds.
+
+    Returns (taus, signs, scale) such that  fn(x) ≈ scale * sum_k signs_k *
+    Sign(x - taus_k).  ``scale`` restores the magnitude removed by integer
+    quantization (on hardware it folds into the next layer's thresholds).
+    """
+    boundaries, outputs = sample_to_pwc(fn, lo, hi, t)
+    alphas = pwc_to_alphas(outputs)
+    total = float(jnp.abs(alphas).sum())
+    if total == 0.0:
+        return jnp.zeros((1,)), jnp.zeros((1,)), 0.0
+    int_alphas = quantize_alphas(alphas, m)
+    taus, signs = expand_unit_thresholds(boundaries, int_alphas)
+    scale = total / m
+    return taus, signs, scale

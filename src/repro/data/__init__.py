@@ -1,0 +1,24 @@
+"""repro.data — deterministic, stateless-resumable synthetic pipelines.
+
+lm.py      Synthetic token streams (zipf unigram + order-1 markov structure)
+           for LM training; step-indexed RNG -> restartable at any step with
+           bitwise-identical batches (fault-tolerance property, tested).
+vision.py  Procedural MNIST-like digits and CIFAR-like textures for the
+           paper's Table II / Fig. 10-11 reproductions (container is offline;
+           DESIGN.md §9 documents the relative-claims validation).
+"""
+from . import lm, vision
+from .lm import LMDataConfig, lm_batch, lm_batch_specs
+from .vision import digits_batch, make_digits, make_textures, textures_batch
+
+__all__ = [
+    "lm",
+    "vision",
+    "LMDataConfig",
+    "lm_batch",
+    "lm_batch_specs",
+    "make_digits",
+    "make_textures",
+    "digits_batch",
+    "textures_batch",
+]

@@ -1,0 +1,96 @@
+"""Synthetic LM token pipeline.
+
+Tokens are drawn from a fixed order-1 markov chain over a zipf-weighted
+vocabulary (so there IS learnable next-token structure — loss decreases),
+generated *on device* from ``(seed, step)`` only:
+
+    batch_t = lm_batch(cfg, step)
+
+No iterator state exists outside the step counter, which makes restarts
+bitwise reproducible (the straggler/failure-recovery story at 1000 nodes:
+any host can regenerate any shard of any step). For multi-host sharding,
+``lm_batch`` accepts (shard, n_shards) and generates only that slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["LMDataConfig", "lm_batch", "lm_batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMDataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_classes: int = 64  # markov "topic" states; vocab is partitioned among them
+    frames_dim: int = 0  # >0: also emit (B, seq, frames_dim) frame embeddings
+
+
+def _zipf_logits(vocab: int, n_classes: int) -> jax.Array:
+    """Per-state next-token logits: each markov state prefers a vocab band."""
+    v = jnp.arange(vocab, dtype=jnp.float32)
+    zipf = -jnp.log1p(v)  # global zipf tilt
+    state = jnp.arange(n_classes, dtype=jnp.float32)[:, None]
+    band = vocab / n_classes
+    center = (state + 0.5) * band
+    pref = -0.5 * ((v[None, :] - center) / (2.0 * band)) ** 2
+    return zipf[None, :] + 4.0 * pref  # (C, V)
+
+
+def lm_batch(
+    cfg: LMDataConfig,
+    step: int,
+    *,
+    shard: int = 0,
+    n_shards: int = 1,
+) -> Dict[str, jax.Array]:
+    """Batch for ``step``: {'tokens', 'labels' (next token), 'mask'}."""
+    assert cfg.global_batch % n_shards == 0
+    b = cfg.global_batch // n_shards
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step), shard)
+    k_state, k_tok, k_frames = jax.random.split(key, 3)
+    logits = _zipf_logits(cfg.vocab, cfg.n_classes)
+
+    # per-sequence markov chain over topic states, tokens sampled per state
+    s0 = jax.random.randint(k_state, (b,), 0, cfg.n_classes)
+
+    def tok_step(state, k):
+        kk, ks = jax.random.split(k)
+        tok = jax.random.categorical(kk, logits[state])  # (b,)
+        # topic persists w.p. 7/8, else re-drawn from the token (deterministic map)
+        switch = jax.random.bernoulli(ks, 0.125, (b,))
+        new_state = jnp.where(switch, tok % cfg.n_classes, state)
+        return new_state, tok
+
+    keys = jax.random.split(k_tok, cfg.seq_len + 1)
+    _, toks = jax.lax.scan(tok_step, s0, keys)  # (S+1, b)
+    toks = jnp.moveaxis(toks, 0, 1).astype(jnp.int32)  # (b, S+1)
+    out = {
+        "tokens": toks[:, :-1],
+        "labels": toks[:, 1:],
+        "mask": jnp.ones((b, cfg.seq_len), jnp.float32),
+    }
+    if cfg.frames_dim:
+        out["frames"] = 0.1 * jax.random.normal(
+            k_frames, (b, cfg.seq_len, cfg.frames_dim), jnp.float32
+        )
+    return out
+
+
+def lm_batch_specs(cfg: LMDataConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs matching lm_batch (for the dry-run / jit signatures)."""
+    b, s = cfg.global_batch, cfg.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "mask": jax.ShapeDtypeStruct((b, s), jnp.float32),
+    }
+    if cfg.frames_dim:
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frames_dim), jnp.float32)
+    return out

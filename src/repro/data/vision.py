@@ -1,0 +1,112 @@
+"""Procedural image classification tasks standing in for MNIST / CIFAR-10
+(offline container; DESIGN.md §9). Both are 10-class, deterministic in
+(seed, step), and hard enough that the Table II *orderings* reproduce.
+
+MNIST-like ("digits"): 5x7 font glyphs rendered onto 28x28 ([-1,1]) with random
+sub-pixel shift, scale jitter, stroke-thickness dilation, and noise.
+
+CIFAR-like ("textures"): 32x32x3 parametric classes (oriented gratings,
+checkers, blobs, radials) with color jitter + heavy noise — small models
+overfit it the way CNV overfits CIFAR-10 (Fig. 11's signature).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["make_digits", "digits_batch", "make_textures", "textures_batch"]
+
+# 5x7 bitmap font for digits 0-9 (rows top->bottom)
+_FONT = {
+    0: ["01110", "10001", "10011", "10101", "11001", "10001", "01110"],
+    1: ["00100", "01100", "00100", "00100", "00100", "00100", "01110"],
+    2: ["01110", "10001", "00001", "00110", "01000", "10000", "11111"],
+    3: ["01110", "10001", "00001", "00110", "00001", "10001", "01110"],
+    4: ["00010", "00110", "01010", "10010", "11111", "00010", "00010"],
+    5: ["11111", "10000", "11110", "00001", "00001", "10001", "01110"],
+    6: ["00110", "01000", "10000", "11110", "10001", "10001", "01110"],
+    7: ["11111", "00001", "00010", "00100", "01000", "01000", "01000"],
+    8: ["01110", "10001", "10001", "01110", "10001", "10001", "01110"],
+    9: ["01110", "10001", "10001", "01111", "00001", "00010", "01100"],
+}
+
+
+def _glyphs() -> jnp.ndarray:
+    g = np.zeros((10, 7, 5), np.float32)
+    for d, rows in _FONT.items():
+        for r, row in enumerate(rows):
+            for c, ch in enumerate(row):
+                g[d, r, c] = float(ch == "1")
+    return jnp.asarray(g)
+
+
+_GLYPHS = _glyphs()
+
+
+def make_digits(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
+    """n MNIST-like samples: (images (n, 28, 28, 1) in [0,1], labels (n,))."""
+    kl, kx, ky, ks, kn, kd = jax.random.split(key, 6)
+    labels = jax.random.randint(kl, (n,), 0, 10)
+    scale = jax.random.uniform(ks, (n,), minval=2.2, maxval=3.2)  # glyph pixel size
+    ox = jax.random.uniform(kx, (n,), minval=2.0, maxval=26.0 - 5 * 2.2)
+    oy = jax.random.uniform(ky, (n,), minval=2.0, maxval=26.0 - 7 * 2.2)
+    yy, xx = jnp.meshgrid(jnp.arange(28.0), jnp.arange(28.0), indexing="ij")
+
+    def render(label, sc, x0, y0):
+        gy = (yy - y0) / sc  # glyph-space coords
+        gx = (xx - x0) / sc
+        iy = jnp.clip(jnp.floor(gy).astype(jnp.int32), 0, 6)
+        ix = jnp.clip(jnp.floor(gx).astype(jnp.int32), 0, 4)
+        inside = (gy >= 0) & (gy < 7) & (gx >= 0) & (gx < 5)
+        val = _GLYPHS[label, iy, ix] * inside
+        return val
+
+    imgs = jax.vmap(render)(labels, scale, ox, oy)
+    # stroke softening + noise
+    blur = jax.random.uniform(kd, (n, 1, 1), minval=0.75, maxval=1.0)
+    noise = 0.15 * jax.random.uniform(kn, (n, 28, 28))
+    imgs = jnp.clip(imgs * blur + noise, 0.0, 1.0)
+    # center to [-1, 1]: binarizing modes (BNN sign(x), BiKA thresholds near
+    # 0) need zero-centered inputs — same role as MNIST mean subtraction
+    return (imgs[..., None] - 0.5) * 2.0, labels
+
+
+def make_textures(key: jax.Array, n: int) -> Tuple[jax.Array, jax.Array]:
+    """n CIFAR-like samples: (images (n, 32, 32, 3) in [0,1], labels (n,))."""
+    kl, kf, kp, kc, kn, kb = jax.random.split(key, 6)
+    labels = jax.random.randint(kl, (n,), 0, 10)
+    yy, xx = jnp.meshgrid(jnp.linspace(-1, 1, 32), jnp.linspace(-1, 1, 32), indexing="ij")
+    freq = jax.random.uniform(kf, (n,), minval=2.0, maxval=5.0)
+    phase = jax.random.uniform(kp, (n,), minval=0.0, maxval=2 * jnp.pi)
+    color = jax.random.uniform(kc, (n, 3), minval=0.3, maxval=1.0)
+
+    def render(label, f, ph):
+        ang = label * (jnp.pi / 10.0)
+        u = xx * jnp.cos(ang) + yy * jnp.sin(ang)
+        v = -xx * jnp.sin(ang) + yy * jnp.cos(ang)
+        grating = jnp.sin(2 * jnp.pi * f * u + ph)
+        checker = jnp.sign(jnp.sin(2 * jnp.pi * f * u + ph) * jnp.sin(2 * jnp.pi * f * v))
+        radial = jnp.sin(2 * jnp.pi * f * jnp.sqrt(u * u + v * v) + ph)
+        blob = jnp.exp(-((u * f / 2) ** 2 + (v * f / 2) ** 2))
+        kind = label % 4
+        base = jnp.stack([grating, checker, radial, blob])[kind]
+        return 0.5 * (base + 1.0)
+
+    base = jax.vmap(render)(labels, freq, phase)  # (n, 32, 32)
+    imgs = base[..., None] * color[:, None, None, :]
+    noise = 0.25 * jax.random.uniform(kn, (n, 32, 32, 3))
+    bias = 0.1 * jax.random.uniform(kb, (n, 1, 1, 3))
+    return (jnp.clip(imgs + noise + bias, 0.0, 1.0) - 0.5) * 2.0, labels
+
+
+def digits_batch(seed: int, step: int, batch: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return make_digits(key, batch)
+
+
+def textures_batch(seed: int, step: int, batch: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return make_textures(key, batch)

@@ -1,0 +1,33 @@
+"""repro.distributed — sharding rules, mesh utilities, pipeline parallelism.
+
+Layout:
+  sharding.py  Logical-axis -> mesh-axis rules (t5x/MaxText style) with
+               divisibility fallbacks; NamedSharding builders for params,
+               batches, optimizer state (ZeRO-1).
+  pipeline.py  GPipe-style pipeline-parallel stage wrapper built on
+               shard_map + lax.ppermute microbatch rotation.
+  meshes.py    Mesh constructors shared by tests (the production mesh lives
+               in repro.launch.mesh so importing it stays device-free).
+"""
+from . import pipeline, sharding
+from .sharding import (
+    LOGICAL_RULES,
+    ShardingRules,
+    batch_sharding,
+    logical_to_spec,
+    named_sharding,
+    param_shardings,
+    zero1_shardings,
+)
+
+__all__ = [
+    "pipeline",
+    "sharding",
+    "LOGICAL_RULES",
+    "ShardingRules",
+    "batch_sharding",
+    "logical_to_spec",
+    "named_sharding",
+    "param_shardings",
+    "zero1_shardings",
+]

@@ -1,0 +1,22 @@
+"""repro.hwsim — calibrated analytic FPGA resource/latency model (DESIGN §7)."""
+from .resource import (
+    PAPER_TABLE3,
+    AcceleratorModel,
+    adp,
+    array_resources,
+    calibrate_latency,
+    latency_us,
+    pdp,
+    pe_luts,
+)
+
+__all__ = [
+    "PAPER_TABLE3",
+    "AcceleratorModel",
+    "pe_luts",
+    "array_resources",
+    "latency_us",
+    "calibrate_latency",
+    "adp",
+    "pdp",
+]

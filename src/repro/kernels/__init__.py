@@ -1,0 +1,17 @@
+"""repro.kernels — Pallas TPU kernels for the CAC hot-spot + baselines.
+
+<name>.py       pl.pallas_call kernels with explicit BlockSpec VMEM tiling
+ops.py          jit-able wrappers (padding, custom-VJP, interpret autodetect)
+ref.py          pure-jnp oracles; tests assert allclose over shape/dtype sweeps
+"""
+from . import ops, ref
+from .ops import bnn_matmul, cac_matmul, cac_train_matmul, qnn_matmul
+
+__all__ = [
+    "ops",
+    "ref",
+    "cac_matmul",
+    "cac_train_matmul",
+    "bnn_matmul",
+    "qnn_matmul",
+]

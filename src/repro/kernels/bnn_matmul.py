@@ -1,0 +1,55 @@
+"""Pallas kernel for the BNN baseline: XNOR-popcount contraction.
+
+On FPGA this is LUT XNORs + a popcount tree (FINN). On TPU the identity
+popcount2(a XNOR b) - K == dot(sign(a), sign(b)) routes the whole layer onto
+the MXU — the contrast with BiKA's VPU-bound compare is exactly the hardware-
+adaptation argument of DESIGN.md §2 (multipliers are free here, comparators
+are not; the paper's resource ranking inverts). Standard tiled matmul with an
+fp32 VMEM accumulator over the k-grid.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bnn_matmul_kernel_call"]
+
+
+def _bnn_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xs = jnp.where(x_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    ws = jnp.where(w_ref[...] >= 0, 1.0, -1.0).astype(jnp.float32)
+    o_ref[...] += jnp.dot(xs, ws, preferred_element_type=jnp.float32)
+
+
+def bnn_matmul_kernel_call(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    # padding note (ops.py): a padded x column is 0 -> sign 0 >= 0 -> +1, so
+    # pads contribute; ops.py pads K with w rows of alternating sign trick or
+    # subtracts the correction — see ops._pad_kn.
+    return pl.pallas_call(
+        _bnn_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,252 @@
+"""Pallas TPU kernels for the BiKA Comparison-Accumulate (CAC) contraction.
+
+The FPGA systolic array (paper Fig. 9) streams activations through a grid of
+weight-stationary comparator PEs. The TPU adaptation (DESIGN.md §2) re-tiles
+that dataflow for the HBM->VMEM->VREG hierarchy:
+
+  * grid (M/bm, N/bn, K/bk); the (bk, bn) threshold block stays resident in
+    VMEM while activation blocks stream over the k-grid — "threshold-block-
+    stationary", the BlockSpec rendition of weight-stationary systolic flow;
+  * inside a block, a fori_loop walks the bk inputs one row at a time, each
+    step doing a (bm, bn) broadcast compare + select + accumulate on the VPU
+    — the direct analogue of one systolic beat (one comparator op per PE);
+  * the out block accumulates across the k-grid (k innermost), so partial
+    sums never round-trip to HBM.
+
+Backward (training STE) kernels recompute the hard-tanh mask blockwise from
+(x, w, beta) — the (M, K, N) mask tensor NEVER materializes, which is the
+whole point: at LM scale it would be ~10^12 elements.
+
+All kernels run under interpret=True on CPU (how tests validate them) and
+compile to Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "cac_matmul_kernel_call",
+    "cac_train_fwd_call",
+    "cac_train_bwd_dx_call",
+    "cac_train_bwd_dw_call",
+]
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Hardware-form forward: y[m,n] = sum_k s[k,n] * Thres(x[m,k] - tau[k,n])
+# ---------------------------------------------------------------------------
+
+
+def _cac_fwd_kernel(x_ref, tau_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    tau = tau_ref[...].astype(jnp.float32)  # (bk, bn)
+    s = s_ref[...].astype(jnp.float32)  # (bk, bn)
+    bk = x.shape[1]
+
+    def beat(k, acc):
+        # one systolic beat: compare one input row against its threshold row
+        cmp = x[:, k][:, None] >= tau[k][None, :]  # (bm, bn)
+        return acc + jnp.where(cmp, s[k][None, :], -s[k][None, :])
+
+    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def cac_matmul_kernel_call(
+    x: jax.Array,
+    tau: jax.Array,
+    s: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """x: (M, K); tau, s: (K, N) -> (M, N) float32. Shapes must divide blocks
+    (ops.py pads with s == 0 rows, which contribute exactly zero)."""
+    m, k = x.shape
+    _, n = tau.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _cac_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, tau, s)
+
+
+# ---------------------------------------------------------------------------
+# Training-form forward: y[m,n] = sum_k Sign(x[m,k] w[k,n] + beta[k,n])
+# ---------------------------------------------------------------------------
+
+
+def _cac_train_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    bk = x.shape[1]
+
+    def beat(k, acc):
+        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
+        return acc + jnp.where(pre >= 0, 1.0, -1.0)
+
+    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(o_ref.shape, jnp.float32))
+    o_ref[...] += acc.astype(o_ref.dtype)
+
+
+def cac_train_fwd_call(
+    x, w, beta, *, block_m=256, block_n=256, block_k=512, interpret=False
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _cac_train_fwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, beta)
+
+
+# ---------------------------------------------------------------------------
+# Training-form backward (STE): blockwise mask recomputation
+# ---------------------------------------------------------------------------
+
+
+def _cac_bwd_dx_kernel(x_ref, w_ref, b_ref, g_ref, dx_ref):
+    """dx[m,k] = sum_n g[m,n] * 1[|pre| <= 1] * w[k,n]; accumulates over the
+    n-grid (innermost)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)  # (bk, bn)
+    b = b_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)  # (bm, bn)
+    bk = x.shape[1]
+
+    def beat(k, acc):
+        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
+        mask = jnp.abs(pre) <= 1.0
+        # effective weight block row (the MXU-able Ŵ of DESIGN.md §2)
+        contrib = jnp.sum(jnp.where(mask, g * w[k][None, :], 0.0), axis=1)  # (bm,)
+        return acc.at[:, k].add(contrib)
+
+    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(dx_ref.shape, jnp.float32))
+    dx_ref[...] += acc.astype(dx_ref.dtype)
+
+
+def cac_train_bwd_dx_call(
+    x, w, beta, g, *, block_m=256, block_n=256, block_k=512, interpret=False
+) -> jax.Array:
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (m // bm, k // bk, n // bn)  # n innermost: dx block accumulates
+    return pl.pallas_call(
+        _cac_bwd_dx_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=interpret,
+    )(x, w, beta, g)
+
+
+def _cac_bwd_dw_kernel(x_ref, w_ref, b_ref, g_ref, dw_ref, db_ref):
+    """dw[k,n] = sum_m g*mask*x; dbeta[k,n] = sum_m g*mask. Accumulates over
+    the m-grid (innermost)."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)
+    bk = x.shape[1]
+
+    def beat(k, carry):
+        dw_acc, db_acc = carry
+        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
+        gm = jnp.where(jnp.abs(pre) <= 1.0, g, 0.0)  # (bm, bn)
+        db_row = jnp.sum(gm, axis=0)  # (bn,)
+        dw_row = jnp.sum(gm * x[:, k][:, None], axis=0)  # (bn,)
+        return dw_acc.at[k].add(dw_row), db_acc.at[k].add(db_row)
+
+    z = jnp.zeros(dw_ref.shape, jnp.float32)
+    dw_acc, db_acc = jax.lax.fori_loop(0, bk, beat, (z, jnp.zeros_like(z)))
+    dw_ref[...] += dw_acc.astype(dw_ref.dtype)
+    db_ref[...] += db_acc.astype(db_ref.dtype)
+
+
+def cac_train_bwd_dw_call(
+    x, w, beta, g, *, block_m=256, block_n=256, block_k=512, interpret=False
+) -> Tuple[jax.Array, jax.Array]:
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    grid = (k // bk, n // bn, m // bm)  # m innermost: dw/db blocks accumulate
+    return pl.pallas_call(
+        _cac_bwd_dw_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda kk, j, i: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda kk, j, i: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda kk, j, i: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda kk, j, i: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk, bn), lambda kk, j, i: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda kk, j, i: (kk, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, beta, g)

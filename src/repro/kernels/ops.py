@@ -1,0 +1,193 @@
+"""jit-able public wrappers around the Pallas kernels: batch-dim flattening,
+block padding (with exact zero-contribution padding schemes per kernel), and
+the custom-VJP training op ``cac_train_matmul`` whose backward runs the
+blockwise mask-recompute kernels (no (M,K,N) residual — DESIGN.md §2).
+
+``interpret=None`` auto-selects interpret mode off-TPU, so the same call
+sites run on CPU tests and TPU deployments.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bnn_matmul import bnn_matmul_kernel_call
+from .cac_matmul import (
+    cac_matmul_kernel_call,
+    cac_train_bwd_dw_call,
+    cac_train_bwd_dx_call,
+    cac_train_fwd_call,
+)
+from .qnn_matmul import qnn_matmul_kernel_call
+
+__all__ = ["cac_matmul", "cac_train_matmul", "bnn_matmul", "qnn_matmul"]
+
+_DEF_BLOCKS = dict(block_m=256, block_n=256, block_k=512)
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def _pad_axis(a: jax.Array, axis: int, to: int, value=0.0) -> jax.Array:
+    pad = to - a.shape[axis]
+    if pad == 0:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _blocks_for(m, k, n, block_m, block_n, block_k):
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, k)
+    return bm, bn, bk
+
+
+def _flatten(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def cac_matmul(
+    x: jax.Array,
+    tau: jax.Array,
+    s: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    **blocks,
+) -> jax.Array:
+    """Hardware-form CAC. x: (..., K); tau, s: (K, N) -> (..., N) fp32.
+
+    Padding scheme: K rows padded with s = 0 contribute exactly 0; M rows and
+    N cols are sliced away after the call."""
+    bl = {**_DEF_BLOCKS, **blocks}
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+    n = tau.shape[1]
+    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = _pad_axis(x2, 0, mp)
+    x2 = _pad_axis(x2, 1, kp)
+    tau_p = _pad_axis(_pad_axis(tau, 0, kp), 1, np_)
+    s_p = _pad_axis(_pad_axis(s, 0, kp, value=0), 1, np_)  # s=0 pad -> zero contribution
+    y = cac_matmul_kernel_call(
+        x2, tau_p, s_p, block_m=bm, block_n=bn, block_k=bk,
+        interpret=_auto_interpret(interpret),
+    )
+    return y[:m, :n].reshape(lead + (n,))
+
+
+# ---------------------------------------------------------------------------
+# Training op with custom VJP
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _cac_train(x2, w, beta, interpret):
+    return _cac_train_fwd_impl(x2, w, beta, interpret)[0]
+
+
+def _cac_train_fwd_impl(x2, w, beta, interpret):
+    m, k = x2.shape
+    n = w.shape[1]
+    bm, bn, bk = _blocks_for(m, k, n, **{
+        "block_m": _DEF_BLOCKS["block_m"],
+        "block_n": _DEF_BLOCKS["block_n"],
+        "block_k": _DEF_BLOCKS["block_k"],
+    })
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
+    bp = _pad_axis(_pad_axis(beta, 0, kp), 1, np_)
+    y = cac_train_fwd_call(xp, wp, bp, block_m=bm, block_n=bn, block_k=bk,
+                           interpret=interpret)
+    # padded K rows contribute Sign(0*0+0) = +1 each: subtract the constant
+    k_pad = kp - k
+    y = y[:m, :n]
+    if k_pad:
+        y = y - jnp.float32(k_pad)
+    return y, (xp, wp, bp, (m, k, n), (bm, bn, bk))
+
+
+def _cac_train_fwd(x2, w, beta, interpret):
+    y, res = _cac_train_fwd_impl(x2, w, beta, interpret)
+    return y, res
+
+
+def _cac_train_bwd(interpret, res, g):
+    xp, wp, bp, (m, k, n), (bm, bn, bk) = res
+    gp = _pad_axis(_pad_axis(g, 0, xp.shape[0]), 1, wp.shape[1])
+    dx = cac_train_bwd_dx_call(xp, wp, bp, gp, block_m=bm, block_n=bn, block_k=bk,
+                               interpret=interpret)
+    dw, dbeta = cac_train_bwd_dw_call(xp, wp, bp, gp, block_m=bm, block_n=bn,
+                                      block_k=bk, interpret=interpret)
+    # padded regions: g = 0 and x = 0 there, so gradients vanish; just slice.
+    return dx[:m, :k], dw[:k, :n], dbeta[:k, :n]
+
+
+_cac_train.defvjp(_cac_train_fwd, _cac_train_bwd)
+
+
+def cac_train_matmul(
+    x: jax.Array, w: jax.Array, beta: jax.Array, *, interpret: Optional[bool] = None
+) -> jax.Array:
+    """Training CAC with STE backward, Pallas fwd+bwd. x: (..., K) -> (..., N)."""
+    x2, lead = _flatten(x)
+    y = _cac_train(x2.astype(jnp.float32), w.astype(jnp.float32),
+                   beta.astype(jnp.float32), _auto_interpret(interpret))
+    return y.reshape(lead + (w.shape[1],))
+
+
+def bnn_matmul(x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None,
+               **blocks) -> jax.Array:
+    """sign(x) @ sign(w). Padding: padded K rows give sign(0)=+1 on both
+    operands -> each pad row adds +1; subtract the constant."""
+    bl = {**_DEF_BLOCKS, **blocks}
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+    n = w.shape[1]
+    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
+    y = bnn_matmul_kernel_call(xp, wp, block_m=bm, block_n=bn, block_k=bk,
+                               interpret=_auto_interpret(interpret))
+    y = y[:m, :n]
+    if kp - k:
+        y = y - jnp.float32(kp - k)
+    return y.reshape(lead + (n,))
+
+
+def qnn_matmul(
+    x_int: jax.Array,
+    w_int: jax.Array,
+    w_scale: jax.Array,
+    x_scale: float,
+    *,
+    interpret: Optional[bool] = None,
+    **blocks,
+) -> jax.Array:
+    """int8 matmul + dequant. Zero padding is exact for integer dot."""
+    bl = {**_DEF_BLOCKS, **blocks}
+    x2, lead = _flatten(x_int)
+    m, k = x2.shape
+    n = w_int.shape[1]
+    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w_int, 0, kp), 1, np_)
+    sp = _pad_axis(w_scale.reshape(1, -1), 1, np_)
+    y = qnn_matmul_kernel_call(xp, wp, sp, x_scale, block_m=bm, block_n=bn,
+                               block_k=bk, interpret=_auto_interpret(interpret))
+    return y[:m, :n].reshape(lead + (n,))

@@ -1,0 +1,6 @@
+"""repro.launch — production mesh, multi-pod dry-run, train/serve CLIs.
+
+Importing this package never touches jax device state; meshes are built by
+functions at call time (the dry-run must set XLA_FLAGS before first init).
+"""
+__all__ = ["mesh", "dryrun", "train", "serve"]

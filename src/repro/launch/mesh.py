@@ -1,0 +1,25 @@
+"""Production mesh constructors (v5e pods: 16x16 = 256 chips/pod).
+
+Functions, not module constants — importing this module never initializes
+jax device state (the dry-run sets XLA_FLAGS first).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["make_production_mesh", "mesh_devices_needed"]
+
+
+def mesh_devices_needed(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16,16) ('data','model') single pod; (2,16,16) ('pod','data','model')
+    across two pods. The 'pod' axis is the DCN-connected data axis; 'model'
+    carries tensor parallelism inside a pod (ICI)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,47 @@
+"""repro.models — model families + the build_model dispatcher."""
+from .base import (
+    ArchConfig,
+    ModelAPI,
+    scan_blocks,
+    scan_blocks_aux,
+    scan_blocks_with_cache,
+    stack_layers,
+)
+from .encdec import build_encdec
+from .hybrid import build_hybrid
+from .lm import build_lm
+from .paper import PAPER_MODELS, PaperConfig, build_paper_model
+from .xlstm import build_xlstm
+
+_FAMILIES = {
+    "lm": build_lm,
+    "hybrid": build_hybrid,
+    "xlstm": build_xlstm,
+    "encdec": build_encdec,
+}
+
+
+def build_model(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
+    try:
+        builder = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown model family {cfg.family!r}") from None
+    return builder(cfg, phase=phase)
+
+
+__all__ = [
+    "ArchConfig",
+    "ModelAPI",
+    "build_model",
+    "build_lm",
+    "build_hybrid",
+    "build_xlstm",
+    "build_encdec",
+    "build_paper_model",
+    "PaperConfig",
+    "PAPER_MODELS",
+    "scan_blocks",
+    "scan_blocks_aux",
+    "scan_blocks_with_cache",
+    "stack_layers",
+]

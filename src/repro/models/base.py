@@ -1,0 +1,171 @@
+"""Model-building utilities: unified architecture config, scan-over-layers
+with boxed params (compile time independent of depth), and the ModelAPI
+facade that the launcher / trainer / server consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import LinearSpec
+from repro.nn.module import P, unbox
+
+__all__ = [
+    "ArchConfig",
+    "ModelAPI",
+    "stack_layers",
+    "scan_blocks",
+    "scan_blocks_aux",
+    "scan_blocks_with_cache",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    """One config describes every assigned architecture (DESIGN.md §6)."""
+
+    name: str
+    family: str  # lm | hybrid | xlstm | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    activation: str = "silu"
+    gated_mlp: bool = True
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding-window attention (SWA)
+    # MoE
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    # SSM / hybrid / xlstm
+    ssm_state: int = 64
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    attn_every: int = 0  # zamba2: shared attention block every k ssm blocks
+    slstm_every: int = 0  # xlstm: sLSTM block every k blocks (0 = all mLSTM)
+    # enc-dec
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1024  # stub frontend sequence length
+    # frontend: tokens | frames (precomputed embeddings via input_specs)
+    frontend: str = "tokens"
+    # compute
+    compute_mode: str = "dense"  # dense | bika | bnn | qnn8
+    bika_m: int = 1
+    bika_impl: str = "cvjp"  # fused | cvjp (bounded-mem bwd) | pallas (TPU kernel)
+    pack_signs: bool = False
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    block_q: int = 256
+    remat: bool = True
+    tp_pad_heads: bool = False  # pad attention heads to the TP axis (§Perf)
+    # capability flags
+    full_attention: bool = True  # True -> long_500k skipped (quadratic)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    def linear_spec(self, **over) -> LinearSpec:
+        return LinearSpec(
+            mode=self.compute_mode,
+            m=self.bika_m,
+            impl=self.bika_impl,
+            pack_signs=self.pack_signs,
+            param_dtype=self.param_dtype,
+            compute_dtype=self.compute_dtype,
+            **over,
+        )
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+class ModelAPI(NamedTuple):
+    """What the launcher consumes. All callables are functional/jit-able."""
+
+    init: Callable[[jax.Array], Any]  # key -> boxed params
+    apply: Callable[[Any, Any], jax.Array]  # (params, batch) -> logits
+    init_cache: Callable[..., Any]  # (batch, max_len, **kw) -> cache
+    decode_step: Callable[[Any, Any, Any, jax.Array], Any]  # -> (logits, cache)
+    prefill: Optional[Callable[..., Any]] = None  # (params, batch, max_len) -> cache
+    apply_aux: Optional[Callable[[Any, Any], Any]] = None  # -> (logits, aux_loss)
+
+
+def stack_layers(key: jax.Array, n: int, init_one: Callable[[jax.Array], Any], axis_name=None):
+    """Initialize n layers and stack their params on a leading 'layers' axis.
+
+    Returns a boxed tree whose leaves are P((n, ...), (axis_name,) + axes).
+    Works under jax.eval_shape (abstract init for the dry-run).
+    """
+    keys = jax.random.split(key, n)
+    vals = jax.vmap(lambda k: unbox(init_one(k)))(keys)
+    template = jax.eval_shape(init_one, keys[0])
+    return jax.tree_util.tree_map(
+        lambda tpl, v: P(
+            v, (axis_name,) + tuple(tpl.axes if tpl.axes else (None,) * (v.ndim - 1))
+        ),
+        template,
+        vals,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def scan_blocks(stacked_params, x: jax.Array, body: Callable, *, remat: bool = True):
+    """x -> block(params_i, x) for i in 0..L-1 via lax.scan (compact HLO)."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, p):
+        return fn(p, carry), None
+
+    y, _ = jax.lax.scan(step, x, stacked_params)
+    return y
+
+
+def scan_blocks_aux(stacked_params, x: jax.Array, body: Callable, *, remat: bool = True):
+    """Like scan_blocks for bodies returning (x, aux_scalar); sums the aux."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, p):
+        x, acc = carry
+        y, aux = fn(p, x)
+        return (y, acc + aux.astype(acc.dtype)), None
+
+    (y, aux), _ = jax.lax.scan(step, (x, jnp.zeros((), jnp.float32)), stacked_params)
+    return y, aux
+
+
+def scan_blocks_with_cache(stacked_params, stacked_cache, x, body, position):
+    """Decode-path scan over layers threading per-layer cache.
+
+    body(params_i, cache_i, x, position) -> (x, new_cache_i).
+    Returns (x, new_stacked_cache).
+    """
+
+    def step(carry, pc):
+        p, c = pc
+        y, nc = body(p, c, carry, position)
+        return y, nc
+
+    y, new_cache = jax.lax.scan(step, x, (stacked_params, stacked_cache))
+    return y, new_cache
+
+
+def make_norm(cfg: ArchConfig):
+    from repro.nn import norms
+
+    if cfg.norm == "rmsnorm":
+        return norms.rmsnorm_init, norms.rmsnorm_apply
+    return (lambda d, dtype=jnp.float32: norms.layernorm_init(d, dtype)), norms.layernorm_apply

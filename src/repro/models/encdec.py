@@ -1,0 +1,215 @@
+"""seamless-m4t-v2-style encoder-decoder backbone (text decoder + modality
+encoder). The modality frontend is a STUB per the brief: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, d_model); the framework
+implements everything after the frontend — encoder stack, cross-attention,
+decoder stack, generation.
+
+Both stacks are homogeneous -> stacked params + lax.scan. Cross-attention KV
+is computed once at prefill and threaded read-only through decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import embedding
+from repro.nn.attention import (
+    AttnConfig,
+    _split_heads,
+    attn_apply,
+    attn_decode_step,
+    attn_init,
+    attn_prefill,
+    dot_attention,
+    init_kv_cache,
+)
+from repro.nn.linear import linear_apply
+from repro.nn.mlp import mlp_apply, mlp_init
+from .base import ArchConfig, ModelAPI, make_norm, scan_blocks, scan_blocks_with_cache, stack_layers
+
+__all__ = ["build_encdec"]
+
+
+def _self_cfg(cfg: ArchConfig, causal: bool) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        causal=causal,
+        block_q=cfg.block_q,
+    )
+
+
+def _cross_cfg(cfg: ArchConfig) -> AttnConfig:
+    return dataclasses.replace(_self_cfg(cfg, causal=False), cross=True)
+
+
+def build_encdec(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
+    assert cfg.n_encoder_layers > 0
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    spec = cfg.linear_spec()
+    norm_init, norm_apply = make_norm(cfg)
+    enc_cfg = _self_cfg(cfg, causal=False)
+    dec_cfg = _self_cfg(cfg, causal=True)
+    x_cfg = _cross_cfg(cfg)
+
+    def _enc_layer_init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "ln1": norm_init(cfg.d_model),
+            "attn": attn_init(k1, enc_cfg, spec, phase=phase),
+            "ln2": norm_init(cfg.d_model),
+            "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, spec, gated=cfg.gated_mlp, phase=phase),
+        }
+
+    def _dec_layer_init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "ln1": norm_init(cfg.d_model),
+            "attn": attn_init(k1, dec_cfg, spec, phase=phase),
+            "lnx": norm_init(cfg.d_model),
+            "xattn": attn_init(k2, x_cfg, spec, phase=phase),
+            "ln2": norm_init(cfg.d_model),
+            "mlp": mlp_init(k3, cfg.d_model, cfg.d_ff, spec, gated=cfg.gated_mlp, phase=phase),
+        }
+
+    def init(key):
+        ke, kenc, kdec, kn = jax.random.split(key, 4)
+        return {
+            "embed": embedding.embed_init(
+                ke, cfg.padded_vocab, cfg.d_model, jnp.dtype(cfg.param_dtype)
+            ),
+            "enc_ln_in": norm_init(cfg.d_model),
+            "encoder": stack_layers(kenc, cfg.n_encoder_layers, _enc_layer_init, "layers"),
+            "decoder": stack_layers(kdec, cfg.n_layers, _dec_layer_init, "layers"),
+            "enc_ln_f": norm_init(cfg.d_model),
+            "ln_f": norm_init(cfg.d_model),
+        }
+
+    def _enc_block(p, x):
+        x = x + attn_apply(p["attn"], norm_apply(p["ln1"], x), enc_cfg, spec, phase=phase)
+        return x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x), spec,
+                             activation=cfg.activation, phase=phase)
+
+    def _encode(params, frames: jax.Array) -> jax.Array:
+        x = norm_apply(params["enc_ln_in"], frames.astype(cdtype))
+        x = scan_blocks(params["encoder"], x, _enc_block, remat=cfg.remat)
+        return norm_apply(params["enc_ln_f"], x)
+
+    def _dec_block(p, x, enc_out):
+        x = x + attn_apply(p["attn"], norm_apply(p["ln1"], x), dec_cfg, spec, phase=phase)
+        x = x + attn_apply(p["xattn"], norm_apply(p["lnx"], x), x_cfg, spec, phase=phase,
+                           kv_x=enc_out)
+        return x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x), spec,
+                             activation=cfg.activation, phase=phase)
+
+    def apply(params, batch: Dict[str, Any]) -> jax.Array:
+        enc_out = _encode(params, batch["frames"])
+        x = embedding.embed_apply(params["embed"], batch["tokens"], cdtype)
+        x = scan_blocks(params["decoder"], x, lambda p, h: _dec_block(p, h, enc_out),
+                        remat=cfg.remat)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x)
+
+    def init_cache(batch: int, max_len: int, *, encoder_len: Optional[int] = None,
+                   quantized: bool = False, dtype=None):
+        dtype = dtype or cdtype
+        enc_len = encoder_len or cfg.encoder_seq
+        self_one = init_kv_cache(batch, dec_cfg, max_len, dtype=dtype, quantized=quantized)
+        cross_shape = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.hd)
+        return {
+            "self": jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape), self_one
+            ),
+            "cross_k": jnp.zeros(cross_shape, dtype),
+            "cross_v": jnp.zeros(cross_shape, dtype),
+        }
+
+    def _cross_decode(p, x, ck, cv):
+        """Cross-attention for one decode token against cached encoder KV."""
+        b = x.shape[0]
+        q = _split_heads(linear_apply(p["wq"], x, spec, phase=phase), cfg.n_heads, cfg.hd)
+        skv = ck.shape[1]
+        out = dot_attention(
+            q,
+            ck.astype(x.dtype),
+            cv.astype(x.dtype),
+            q_positions=jnp.zeros((1,), jnp.int32),
+            kv_positions=jnp.arange(skv),
+            causal=False,
+        )
+        return linear_apply(p["wo"], out.reshape(b, 1, -1), spec, phase=phase)
+
+    def decode_step(params, tokens, cache, position):
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+
+        def body(p_c, x, pos):
+            p, (sc, ck, cv) = p_c["p"], p_c["c"]
+            a, new_sc = attn_decode_step(p["attn"], norm_apply(p["ln1"], x), sc, pos,
+                                         dec_cfg, spec, phase=phase)
+            x = x + a
+            x = x + _cross_decode(p["xattn"], norm_apply(p["lnx"], x), ck, cv)
+            x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x), spec,
+                              activation=cfg.activation, phase=phase)
+            return x, (new_sc, ck, cv)
+
+        def step(carry, pc):
+            y, nc = body(pc, carry, position)
+            return y, nc
+
+        x, new = jax.lax.scan(
+            step,
+            x,
+            {"p": params["decoder"], "c": (cache["self"], cache["cross_k"], cache["cross_v"])},
+        )
+        x = norm_apply(params["ln_f"], x)
+        logits = embedding.unembed_apply(params["embed"], x)
+        new_self, ck, cv = new
+        return logits, {"self": new_self, "cross_k": ck, "cross_v": cv}
+
+    def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False):
+        """Encoder pass + cross-KV projection + decoder prompt prefill."""
+        enc_out = _encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        ml = max_len or tokens.shape[1]
+
+        def cross_kv(p):
+            k = _split_heads(linear_apply(p["xattn"]["wk"], enc_out, spec, phase=phase),
+                             cfg.n_kv_heads, cfg.hd)
+            v = _split_heads(linear_apply(p["xattn"]["wv"], enc_out, spec, phase=phase),
+                             cfg.n_kv_heads, cfg.hd)
+            return k.astype(cdtype), v.astype(cdtype)
+
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+
+        def step(carry, p):
+            x = carry
+            a, sc = attn_prefill(p["attn"], norm_apply(p["ln1"], x), dec_cfg, spec,
+                                 max_len=ml, phase=phase, quantized=quantized,
+                                 cache_dtype=cdtype)
+            x = x + a
+            x = x + attn_apply(p["xattn"], norm_apply(p["lnx"], x), x_cfg, spec,
+                               phase=phase, kv_x=enc_out)
+            x = x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x), spec,
+                              activation=cfg.activation, phase=phase)
+            ck, cv = cross_kv(p)
+            return x, (sc, ck, cv)
+
+        x, (self_c, ck, cv) = jax.lax.scan(step, x, params["decoder"])
+        x = norm_apply(params["ln_f"], x[:, -1:])
+        logits = embedding.unembed_apply(params["embed"], x)
+        return logits, {"self": self_c, "cross_k": ck, "cross_v": cv}
+
+    return ModelAPI(
+        init=init,
+        apply=apply,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        prefill=prefill,
+        apply_aux=lambda p, b: (apply(p, b), jnp.zeros((), jnp.float32)),
+    )

@@ -1,0 +1,238 @@
+"""zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied every ``attn_every`` SSM blocks (weight sharing across applications,
+as in Zamba/Zamba2 — each application keeps its own KV stream).
+
+Mamba layers are homogeneous -> stacked and scanned in (groups, per_group)
+nested scans; the shared block's params are closure-captured constants of the
+outer scan. Sub-quadratic in sequence length, so this family runs the
+long_500k cell (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import embedding
+from repro.nn.attention import (
+    AttnConfig,
+    attn_apply,
+    attn_decode_step,
+    attn_init,
+    attn_prefill,
+    init_kv_cache,
+)
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.module import P
+from repro.nn.ssm import (
+    SSMConfig,
+    init_ssm_state,
+    ssm_apply,
+    ssm_decode_step,
+    ssm_init,
+)
+from .base import ArchConfig, ModelAPI, make_norm, stack_layers
+
+__all__ = ["build_hybrid"]
+
+
+def _ssm_cfg(cfg: ArchConfig) -> SSMConfig:
+    return SSMConfig(
+        d_model=cfg.d_model,
+        d_state=cfg.ssm_state,
+        expand=cfg.ssm_expand,
+        head_dim=cfg.ssm_head_dim,
+    )
+
+
+def _attn_cfg(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        block_q=cfg.block_q,
+    )
+
+
+def _regroup(boxed, groups: int):
+    """Stacked (L, ...) boxed tree -> (groups, L/groups, ...)."""
+
+    def one(p: P) -> P:
+        v = p.value
+        new = v.reshape((groups, v.shape[0] // groups) + v.shape[1:])
+        axes = p.axes if p.axes is not None else (None,) * v.ndim
+        return P(new, (None,) + tuple(axes))
+
+    return jax.tree_util.tree_map(one, boxed, is_leaf=lambda x: isinstance(x, P))
+
+
+def _regroup_plain(tree, groups: int):
+    return jax.tree_util.tree_map(
+        lambda v: v.reshape((groups, v.shape[0] // groups) + v.shape[1:]), tree
+    )
+
+
+def _flatten_groups(tree):
+    return jax.tree_util.tree_map(
+        lambda v: v.reshape((v.shape[0] * v.shape[1],) + v.shape[2:]), tree
+    )
+
+
+def build_hybrid(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
+    assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0, (
+        cfg.n_layers,
+        cfg.attn_every,
+    )
+    groups = cfg.n_layers // cfg.attn_every
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    scfg, acfg = _ssm_cfg(cfg), _attn_cfg(cfg)
+    spec = cfg.linear_spec()
+    norm_init, norm_apply = make_norm(cfg)
+
+    def _mamba_init(key):
+        return {"ln": norm_init(cfg.d_model), "ssm": ssm_init(key, scfg, spec, phase=phase)}
+
+    def _mamba_block(p, x, *, return_state=False):
+        y = ssm_apply(p["ssm"], norm_apply(p["ln"], x), scfg, spec, phase=phase,
+                      return_state=return_state)
+        if return_state:
+            y, st = y
+            return x + y, st
+        return x + y
+
+    def _shared_block(p, x):
+        a = attn_apply(p["attn"], norm_apply(p["ln1"], x), acfg, spec, phase=phase)
+        x = x + a
+        return x + mlp_apply(p["mlp"], norm_apply(p["ln2"], x), spec,
+                             activation=cfg.activation, phase=phase)
+
+    def init(key):
+        ke, km, ka, kf = jax.random.split(key, 4)
+        k1, k2 = jax.random.split(ka)
+        return {
+            "embed": embedding.embed_init(ke, cfg.padded_vocab, cfg.d_model,
+                                          jnp.dtype(cfg.param_dtype)),
+            "mamba": stack_layers(km, cfg.n_layers, _mamba_init, "layers"),
+            "shared": {
+                "ln1": norm_init(cfg.d_model),
+                "attn": attn_init(k1, acfg, spec, phase=phase),
+                "ln2": norm_init(cfg.d_model),
+                "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff, spec, gated=cfg.gated_mlp,
+                                phase=phase),
+            },
+            "ln_f": norm_init(cfg.d_model),
+        }
+
+    def _backbone(params, x):
+        mam = _regroup_plain(params["mamba"], groups)
+        inner_fn = jax.checkpoint(_mamba_block) if cfg.remat else _mamba_block
+        shared_fn = jax.checkpoint(_shared_block) if cfg.remat else _shared_block
+
+        def outer(carry, pg):
+            def inner(c, p):
+                return inner_fn(p, c), None
+
+            y, _ = jax.lax.scan(inner, carry, pg)
+            return shared_fn(params["shared"], y), None
+
+        x, _ = jax.lax.scan(outer, x, mam)
+        return x
+
+    def apply(params, batch: Dict[str, Any]) -> jax.Array:
+        x = embedding.embed_apply(params["embed"], batch["tokens"], cdtype)
+        x = _backbone(params, x)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x)
+
+    def init_cache(batch: int, max_len: int, *, quantized: bool = False, dtype=None):
+        dtype = dtype or cdtype
+        m_one = init_ssm_state(batch, scfg)
+        kv_one = init_kv_cache(batch, acfg, max_len, dtype=dtype, quantized=quantized)
+        return {
+            "mamba": jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape), m_one
+            ),
+            "shared": jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l[None], (groups,) + l.shape), kv_one
+            ),
+        }
+
+    def decode_step(params, tokens, cache, position):
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        mam = _regroup_plain(params["mamba"], groups)
+        mstates = _regroup_plain(cache["mamba"], groups)
+
+        def outer(carry, scanned):
+            pg, sg, kvg = scanned
+
+            def inner(c, ps):
+                p, s = ps
+                y, ns = ssm_decode_step(p["ssm"], norm_apply(p["ln"], c), s, scfg, spec,
+                                        phase=phase)
+                return c + y, ns
+
+            x, new_states = jax.lax.scan(inner, carry, (pg, sg))
+            a, new_kv = attn_decode_step(
+                params["shared"]["attn"],
+                norm_apply(params["shared"]["ln1"], x),
+                kvg,
+                position,
+                acfg,
+                spec,
+                phase=phase,
+            )
+            x = x + a
+            x = x + mlp_apply(params["shared"]["mlp"],
+                              norm_apply(params["shared"]["ln2"], x), spec,
+                              activation=cfg.activation, phase=phase)
+            return x, (new_states, new_kv)
+
+        x, (new_m, new_kv) = jax.lax.scan(outer, x, (mam, mstates, cache["shared"]))
+        x = norm_apply(params["ln_f"], x)
+        logits = embedding.unembed_apply(params["embed"], x)
+        return logits, {"mamba": _flatten_groups(new_m), "shared": new_kv}
+
+    def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False):
+        tokens = batch["tokens"]
+        ml = max_len or tokens.shape[1]
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        mam = _regroup_plain(params["mamba"], groups)
+
+        def outer(carry, pg):
+            def inner(c, p):
+                y, st = _mamba_block(p, c, return_state=True)
+                return y, st
+
+            x, states = jax.lax.scan(inner, carry, pg)
+            a, kv = attn_prefill(
+                params["shared"]["attn"],
+                norm_apply(params["shared"]["ln1"], x),
+                acfg,
+                spec,
+                max_len=ml,
+                phase=phase,
+                quantized=quantized,
+                cache_dtype=cdtype,
+            )
+            x = x + a
+            x = x + mlp_apply(params["shared"]["mlp"],
+                              norm_apply(params["shared"]["ln2"], x), spec,
+                              activation=cfg.activation, phase=phase)
+            return x, (states, kv)
+
+        x, (mstates, kvs) = jax.lax.scan(outer, x, mam)
+        x = norm_apply(params["ln_f"], x[:, -1:])
+        logits = embedding.unembed_apply(params["embed"], x)
+        return logits, {"mamba": _flatten_groups(mstates), "shared": kvs}
+
+    return ModelAPI(
+        init=init,
+        apply=apply,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        prefill=prefill,
+        apply_aux=lambda p, b: (apply(p, b), jnp.zeros((), jnp.float32)),
+    )

@@ -1,0 +1,201 @@
+"""Decoder-only transformer LM family: smollm / qwen / nemotron / phi3 /
+grok (MoE) / mixtral (MoE+SWA) / chameleon (early-fusion VLM — VQ image
+tokens are ordinary vocabulary entries).
+
+Layers are homogeneous, so parameters are stacked on a leading 'layers' axis
+and the forward pass is a single lax.scan — HLO size and compile time are
+independent of depth (essential for the 512-device dry-run on 1 CPU core).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from repro.nn import embedding
+from repro.nn.attention import (
+    AttnConfig,
+    attn_apply,
+    attn_decode_step,
+    attn_init,
+    attn_prefill,
+    init_kv_cache,
+)
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.moe import MoEConfig, moe_apply, moe_init
+from .base import (
+    ArchConfig,
+    ModelAPI,
+    make_norm,
+    scan_blocks_aux,
+    scan_blocks_with_cache,
+    stack_layers,
+)
+
+__all__ = ["build_lm"]
+
+
+def _attn_cfg(cfg: ArchConfig) -> AttnConfig:
+    return AttnConfig(
+        d_model=cfg.d_model,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta,
+        window=cfg.window,
+        qkv_bias=cfg.qkv_bias,
+        block_q=cfg.block_q,
+        tp_pad_heads=cfg.tp_pad_heads,
+    )
+
+
+def _moe_cfg(cfg: ArchConfig) -> MoEConfig:
+    return MoEConfig(
+        n_experts=cfg.n_experts,
+        top_k=cfg.top_k,
+        capacity_factor=cfg.capacity_factor,
+        gated=cfg.gated_mlp,
+        activation=cfg.activation,
+    )
+
+
+def _layer_init(key: jax.Array, cfg: ArchConfig, phase: str):
+    norm_init, _ = make_norm(cfg)
+    spec = cfg.linear_spec()
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": norm_init(cfg.d_model),
+        "ln2": norm_init(cfg.d_model),
+        "attn": attn_init(k1, _attn_cfg(cfg), spec, phase=phase),
+    }
+    if cfg.n_experts:
+        p["moe"] = moe_init(k2, cfg.d_model, cfg.d_ff, _moe_cfg(cfg), spec, phase=phase)
+    else:
+        p["mlp"] = mlp_init(k2, cfg.d_model, cfg.d_ff, spec, gated=cfg.gated_mlp, phase=phase)
+    return p
+
+
+def _layer_apply(p, x: jax.Array, cfg: ArchConfig, phase: str):
+    _, norm_apply = make_norm(cfg)
+    spec = cfg.linear_spec()
+    x = constrain(x, ("batch", "seq", None))
+    x = x + attn_apply(p["attn"], norm_apply(p["ln1"], x), _attn_cfg(cfg), spec, phase=phase)
+    h = norm_apply(p["ln2"], x)
+    if cfg.n_experts:
+        y, aux = moe_apply(p["moe"], h, _moe_cfg(cfg), spec, phase=phase)
+    else:
+        y = mlp_apply(p["mlp"], h, spec, activation=cfg.activation, phase=phase)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _layer_decode(p, cache, x, position, cfg: ArchConfig, phase: str):
+    _, norm_apply = make_norm(cfg)
+    spec = cfg.linear_spec()
+    a, new_cache = attn_decode_step(
+        p["attn"], norm_apply(p["ln1"], x), cache, position, _attn_cfg(cfg), spec, phase=phase
+    )
+    x = x + a
+    h = norm_apply(p["ln2"], x)
+    if cfg.n_experts:
+        y, _aux = moe_apply(p["moe"], h, _moe_cfg(cfg), spec, phase=phase)
+    else:
+        y = mlp_apply(p["mlp"], h, spec, activation=cfg.activation, phase=phase)
+    return x + y, new_cache
+
+
+def _layer_prefill(p, x, cfg: ArchConfig, phase: str, max_len: int, quantized: bool):
+    _, norm_apply = make_norm(cfg)
+    spec = cfg.linear_spec()
+    a, cache = attn_prefill(
+        p["attn"],
+        norm_apply(p["ln1"], x),
+        _attn_cfg(cfg),
+        spec,
+        max_len=max_len,
+        phase=phase,
+        quantized=quantized,
+        cache_dtype=jnp.dtype(cfg.compute_dtype),
+    )
+    x = x + a
+    h = norm_apply(p["ln2"], x)
+    if cfg.n_experts:
+        y, _ = moe_apply(p["moe"], h, _moe_cfg(cfg), cfg.linear_spec(), phase=phase)
+    else:
+        y = mlp_apply(p["mlp"], h, spec, activation=cfg.activation, phase=phase)
+    return x + y, cache
+
+
+def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
+    cdtype = jnp.dtype(cfg.compute_dtype)
+
+    def init(key: jax.Array):
+        ke, kl, kn = jax.random.split(key, 3)
+        norm_init, _ = make_norm(cfg)
+        return {
+            "embed": embedding.embed_init(ke, cfg.padded_vocab, cfg.d_model, jnp.dtype(cfg.param_dtype)),
+            "layers": stack_layers(kl, cfg.n_layers, lambda k: _layer_init(k, cfg, phase), "layers"),
+            "ln_f": norm_init(cfg.d_model),
+        }
+
+    def apply_aux(params, batch: Dict[str, Any]):
+        tokens = batch["tokens"]  # (B, S)
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, aux = scan_blocks_aux(
+            params["layers"], x, lambda p, h: _layer_apply(p, h, cfg, phase), remat=cfg.remat
+        )
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), aux / max(cfg.n_layers, 1)
+
+    def apply(params, batch: Dict[str, Any]) -> jax.Array:
+        return apply_aux(params, batch)[0]
+
+    def init_cache(batch: int, max_len: int, *, quantized: bool = False, dtype=None):
+        dtype = dtype or cdtype
+        one = init_kv_cache(batch, _attn_cfg(cfg), max_len, dtype=dtype, quantized=quantized)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (cfg.n_layers,) + l.shape), one
+        )
+
+    def decode_step(params, tokens, cache, position):
+        """tokens: (B, 1) -> (logits (B, 1, V), new stacked cache)."""
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, new_cache = scan_blocks_with_cache(
+            params["layers"],
+            cache,
+            x,
+            lambda p, c, h, pos: _layer_decode(p, c, h, pos, cfg, phase),
+            position,
+        )
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
+    def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False):
+        """Prompt pass: (last-token logits (B,1,V), stacked KV cache)."""
+        tokens = batch["tokens"]
+        ml = max_len or tokens.shape[1]
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+
+        def step(carry, p):
+            y, cache = _layer_prefill(p, carry, cfg, phase, ml, quantized)
+            return y, cache
+
+        x, caches = jax.lax.scan(step, x, params["layers"])
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x[:, -1:])
+        return embedding.unembed_apply(params["embed"], x), caches
+
+    return ModelAPI(
+        init=init,
+        apply=apply,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        prefill=prefill,
+        apply_aux=apply_aux,
+    )

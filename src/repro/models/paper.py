@@ -1,0 +1,154 @@
+"""The paper's evaluation models (§III-A): TFC / SFC / LFC MLPs (MNIST) and
+the VGG-like CNV (CIFAR-10), each trainable in dense / bika / bnn / qnn8 mode
+through the switchable linear backend — exactly the four-way comparison of
+Table II.
+
+Mode conventions (paper-faithful):
+  bika — every layer is sum_k Sign(w x + beta); NO inter-layer activation
+         (the Sign is the nonlinearity) and integer-valued activations.
+  bnn  — sign(x) @ sign(w) XNOR-popcount semantics, Sign is the activation.
+  qnn8 / dense — ReLU between layers.
+Last layer outputs raw (integer for bika/bnn) class scores used as logits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.conv import conv2d_apply, conv2d_init, maxpool2d
+from repro.nn.linear import LinearSpec, linear_apply, linear_init
+from repro.nn.module import unbox
+
+__all__ = ["PaperConfig", "TFC", "SFC", "LFC", "CNV", "build_paper_model", "PAPER_MODELS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperConfig:
+    name: str
+    kind: str  # 'mlp' | 'cnv'
+    features: Tuple[int, ...]  # hidden + output widths (mlp) / fc head (cnv)
+    in_dim: int = 784
+    image_hw: Tuple[int, int, int] = (32, 32, 3)
+    conv_plan: Tuple[Any, ...] = (64, 64, "P", 128, 128, "P", 256, 256, "P")
+    mode: str = "bika"
+    m: int = 1
+    hw_exact: bool = False
+
+    def spec(self) -> LinearSpec:
+        # FINN-style BNN/BiKA training interposes a normalization that the
+        # hardware folds into the layer thresholds at export (FINN's BN
+        # folding; Eq. 8 absorbs any affine into beta). We use the static
+        # rsqrt(K) + learned per-channel gamma for that role: without it the
+        # raw +/-K integer logits saturate softmax and training collapses
+        # (measured: chance accuracy at out_scale='none'). The deployed CAC
+        # datapath is unchanged — integer comparator sums; gamma/rsqrt fold
+        # into the next layer's thresholds. dense/qnn8 keep a bias like
+        # ordinary ANNs and ignore out_scale.
+        return LinearSpec(
+            mode=self.mode,
+            m=self.m,
+            out_scale="rsqrt_k",
+            bias=self.mode in ("dense", "qnn8"),
+        )
+
+    def replace(self, **kw) -> "PaperConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# Table II structures (input 784 for MNIST MLPs).
+TFC = PaperConfig("tfc", "mlp", (64, 32, 10))
+SFC = PaperConfig("sfc", "mlp", (256, 256, 256, 10))
+LFC = PaperConfig("lfc", "mlp", (1024, 1024, 1024, 10))
+CNV = PaperConfig("cnv", "cnv", (512, 512, 10))
+
+PAPER_MODELS = {"tfc": TFC, "sfc": SFC, "lfc": LFC, "cnv": CNV}
+
+
+def _inter_act(mode: str, x: jax.Array) -> jax.Array:
+    """Between-layer activation: modes with built-in nonlinearity use none."""
+    if mode in ("dense", "qnn8"):
+        return jax.nn.relu(x)
+    return x  # bika: Sign inside; bnn: sign applied to activations inside
+
+
+def _mlp_init(key: jax.Array, cfg: PaperConfig, phase: str):
+    spec = cfg.spec()
+    dims = (cfg.in_dim,) + cfg.features
+    keys = jax.random.split(key, len(cfg.features))
+    return [
+        linear_init(keys[i], dims[i], dims[i + 1], spec, axes=(None, None), phase=phase)
+        for i in range(len(cfg.features))
+    ]
+
+
+def _mlp_apply(params: List, x: jax.Array, cfg: PaperConfig, phase: str) -> jax.Array:
+    spec = cfg.spec()
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params):
+        x = linear_apply(p, x, spec, phase=phase)
+        if i < len(params) - 1:
+            x = _inter_act(cfg.mode, x)
+    return x.astype(jnp.float32)
+
+
+def _cnv_init(key: jax.Array, cfg: PaperConfig, phase: str):
+    spec = cfg.spec()
+    convs = [c for c in cfg.conv_plan if c != "P"]
+    keys = jax.random.split(key, len(convs) + len(cfg.features))
+    params: Dict[str, Any] = {"conv": [], "fc": []}
+    c_in = cfg.image_hw[2]
+    ki = 0
+    for c in convs:
+        params["conv"].append(conv2d_init(keys[ki], c_in, c, spec, phase=phase))
+        c_in = c
+        ki += 1
+    # spatial size after 3 'SAME' pools on 32x32 -> 4x4
+    hw = cfg.image_hw[0]
+    for _ in [c for c in cfg.conv_plan if c == "P"]:
+        hw = -(-hw // 2)
+    flat = hw * hw * c_in
+    dims = (flat,) + cfg.features
+    for i in range(len(cfg.features)):
+        params["fc"].append(
+            linear_init(keys[ki], dims[i], dims[i + 1], spec, axes=(None, None), phase=phase)
+        )
+        ki += 1
+    return params
+
+
+def _cnv_apply(params, x: jax.Array, cfg: PaperConfig, phase: str) -> jax.Array:
+    spec = cfg.spec()
+    if x.ndim == 2:
+        x = x.reshape((-1,) + cfg.image_hw)
+    ci = 0
+    for c in cfg.conv_plan:
+        if c == "P":
+            x = maxpool2d(x)
+        else:
+            x = conv2d_apply(params["conv"][ci], x, spec, phase=phase)
+            x = _inter_act(cfg.mode, x)
+            ci += 1
+    x = x.reshape(x.shape[0], -1)
+    for i, p in enumerate(params["fc"]):
+        x = linear_apply(p, x, spec, phase=phase)
+        if i < len(params["fc"]) - 1:
+            x = _inter_act(cfg.mode, x)
+    return x.astype(jnp.float32)
+
+
+def build_paper_model(cfg: PaperConfig, *, phase: str = "train"):
+    """Returns (init, apply): init(key) -> boxed params; apply(params, x) -> logits."""
+    if cfg.kind == "mlp":
+        return (
+            lambda key: _mlp_init(key, cfg, phase),
+            lambda p, x: _mlp_apply(p, x, cfg, phase),
+        )
+    if cfg.kind == "cnv":
+        return (
+            lambda key: _cnv_init(key, cfg, phase),
+            lambda p, x: _cnv_apply(p, x, cfg, phase),
+        )
+    raise ValueError(cfg.kind)

@@ -1,0 +1,115 @@
+"""xLSTM-125m: a stack of mLSTM blocks with sLSTM blocks interleaved
+(``slstm_every``; layer i is sLSTM when i % slstm_every == 0).
+
+Blocks are heterogeneous, so the (shallow, 12-layer) stack is unrolled in
+Python rather than scanned — HLO stays small at this depth. Recurrent, so the
+family runs the long_500k cell (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import embedding
+from repro.nn.xlstm_blocks import (
+    XLSTMConfig,
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_apply,
+    mlstm_decode_step,
+    mlstm_init,
+    slstm_apply,
+    slstm_decode_step,
+    slstm_init,
+)
+from .base import ArchConfig, ModelAPI, make_norm
+
+__all__ = ["build_xlstm"]
+
+
+def _xcfg(cfg: ArchConfig) -> XLSTMConfig:
+    return XLSTMConfig(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+def _is_slstm(cfg: ArchConfig, i: int) -> bool:
+    return cfg.slstm_every > 0 and i % cfg.slstm_every == 0
+
+
+def build_xlstm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
+    cdtype = jnp.dtype(cfg.compute_dtype)
+    xcfg = _xcfg(cfg)
+    spec = cfg.linear_spec()
+    norm_init, norm_apply = make_norm(cfg)
+
+    def init(key):
+        keys = jax.random.split(key, cfg.n_layers + 1)
+        layers: List[Any] = []
+        for i in range(cfg.n_layers):
+            cell_init = slstm_init if _is_slstm(cfg, i) else mlstm_init
+            layers.append(
+                {"ln": norm_init(cfg.d_model), "cell": cell_init(keys[i], xcfg, spec, phase=phase)}
+            )
+        return {
+            "embed": embedding.embed_init(
+                keys[-1], cfg.padded_vocab, cfg.d_model, jnp.dtype(cfg.param_dtype)
+            ),
+            "layers": layers,
+            "ln_f": norm_init(cfg.d_model),
+        }
+
+    def _block(i, p, x, *, return_state=False):
+        fn = slstm_apply if _is_slstm(cfg, i) else mlstm_apply
+        y = fn(p["cell"], norm_apply(p["ln"], x), xcfg, spec, phase=phase,
+               return_state=return_state)
+        if return_state:
+            y, st = y
+            return x + y, st
+        return x + y
+
+    def apply(params, batch: Dict[str, Any]) -> jax.Array:
+        x = embedding.embed_apply(params["embed"], batch["tokens"], cdtype)
+        for i, p in enumerate(params["layers"]):
+            blk = (lambda q, h, i=i: _block(i, q, h))
+            if cfg.remat:
+                blk = jax.checkpoint(blk)
+            x = blk(p, x)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x)
+
+    def init_cache(batch: int, max_len: int = 0, **_kw):
+        states = []
+        for i in range(cfg.n_layers):
+            mk = init_slstm_state if _is_slstm(cfg, i) else init_mlstm_state
+            states.append(mk(batch, xcfg))
+        return states
+
+    def decode_step(params, tokens, cache, position):
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        new_cache = []
+        for i, (p, st) in enumerate(zip(params["layers"], cache)):
+            fn = slstm_decode_step if _is_slstm(cfg, i) else mlstm_decode_step
+            y, ns = fn(p["cell"], norm_apply(p["ln"], x), st, xcfg, spec, phase=phase)
+            x = x + y
+            new_cache.append(ns)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
+    def prefill(params, batch, *, max_len: Optional[int] = None, **_kw):
+        x = embedding.embed_apply(params["embed"], batch["tokens"], cdtype)
+        states = []
+        for i, p in enumerate(params["layers"]):
+            x, st = _block(i, p, x, return_state=True)
+            states.append(st)
+        x = norm_apply(params["ln_f"], x[:, -1:])
+        return embedding.unembed_apply(params["embed"], x), states
+
+    return ModelAPI(
+        init=init,
+        apply=apply,
+        init_cache=init_cache,
+        decode_step=decode_step,
+        prefill=prefill,
+        apply_aux=lambda p, b: (apply(p, b), jnp.zeros((), jnp.float32)),
+    )

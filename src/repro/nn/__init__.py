@@ -1,0 +1,28 @@
+"""repro.nn — functional layer library with switchable compute backends."""
+from . import attention, conv, embedding, linear, mlp, module, moe, norms, rotary, ssm, xlstm_blocks
+from .linear import LinearSpec, linear_apply, linear_init, linear_to_serve
+from .module import P, axes_of, boxed_like, count_params, param_bytes, unbox
+
+__all__ = [
+    "attention",
+    "conv",
+    "embedding",
+    "linear",
+    "mlp",
+    "module",
+    "moe",
+    "norms",
+    "rotary",
+    "ssm",
+    "xlstm_blocks",
+    "LinearSpec",
+    "linear_apply",
+    "linear_init",
+    "linear_to_serve",
+    "P",
+    "axes_of",
+    "boxed_like",
+    "count_params",
+    "param_bytes",
+    "unbox",
+]

@@ -1,0 +1,380 @@
+"""Grouped-query attention with blockwise (flash-style) softmax, sliding
+windows, KV caches (full + SWA ring buffer) and cross-attention.
+
+Projections route through the backend-switchable linear layer, so attention
+runs in dense / bika / bnn / qnn8 mode uniformly. Score math and softmax stay
+fp32 (DESIGN.md §6).
+
+Blockwise path: scan over query blocks; each block sees the full KV but the
+(block_q x S_kv) score tile is the only large intermediate, and the scan body
+is rematerialized (jax.checkpoint) so the backward pass recomputes scores
+instead of storing them — the XLA analogue of flash attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from .linear import LinearSpec, linear_apply, linear_init
+from .module import P
+from .rotary import apply_rope
+
+__all__ = [
+    "AttnConfig",
+    "attn_init",
+    "attn_apply",
+    "attn_prefill",
+    "attn_decode_step",
+    "init_kv_cache",
+    "dot_attention",
+    "blockwise_attention",
+]
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None  # sliding-window size (Mixtral SWA)
+    qkv_bias: bool = False  # Qwen-style
+    causal: bool = True
+    block_q: int = 256  # blockwise attention query tile
+    cross: bool = False  # cross-attention (KV from encoder output)
+    # pad the head dim to a multiple of the mesh 'model' axis so attention
+    # tensor-parallelizes when n_heads doesn't divide it (smollm: 15 heads vs
+    # model=16 otherwise replicates the whole attention — §Perf hillclimb).
+    tp_pad_heads: bool = False
+
+
+def _tp_size() -> int:
+    from repro.distributed.constraints import _context_mesh
+
+    mesh = _context_mesh()
+    return int(mesh.shape.get("model", 1)) if mesh is not None else 1
+
+
+def _maybe_pad_heads(q: jax.Array, k: jax.Array, v: jax.Array, cfg: AttnConfig):
+    """If heads don't divide the TP axis: expand GQA->MHA and zero-pad heads
+    to the next multiple. Returns (q, k, v, orig_hq); padded heads attend to
+    zero keys (uniform softmax) and are sliced away by the caller."""
+    tp = _tp_size()
+    hq, hkv = q.shape[2], k.shape[2]
+    if not cfg.tp_pad_heads or tp == 1 or (hq % tp == 0 and hkv % tp == 0):
+        return q, k, v, hq
+    g = hq // hkv
+    if g > 1:  # expand kv to one head per q head
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    pad = (-hq) % tp
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0))
+        q, k, v = jnp.pad(q, widths), jnp.pad(k, widths), jnp.pad(v, widths)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "heads", None))
+    v = constrain(v, ("batch", "seq", "heads", None))
+    return q, k, v, hq
+
+
+def attn_init(key: jax.Array, cfg: AttnConfig, spec: LinearSpec, *, phase: str = "train"):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    qspec = dataclasses.replace(spec, bias=cfg.qkv_bias)
+    d, hd = cfg.d_model, cfg.head_dim
+    return {
+        "wq": linear_init(kq, d, cfg.n_heads * hd, qspec, axes=("embed", "heads"), phase=phase),
+        "wk": linear_init(kk, d, cfg.n_kv_heads * hd, qspec, axes=("embed", "kv_heads"), phase=phase),
+        "wv": linear_init(kv, d, cfg.n_kv_heads * hd, qspec, axes=("embed", "kv_heads"), phase=phase),
+        "wo": linear_init(ko, cfg.n_heads * hd, d, spec, axes=("heads", "embed"), phase=phase),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (n, hd))
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,Hkv,G,D), k: (B,Skv,Hkv,D) -> (B,Hkv,G,Sq,Skv) fp32."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k, preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p: jax.Array, v: jax.Array) -> jax.Array:
+    """p: (B,Hkv,G,Sq,Skv), v: (B,Skv,Hkv,D) -> (B,Sq,Hkv,G,D)."""
+    return jnp.einsum("bhgst,bthd->bshgd", p, v.astype(p.dtype))
+
+
+def dot_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Unblocked GQA attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = _gqa_scores(qg, k) / jnp.sqrt(jnp.asarray(d, jnp.float32))
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    qp = q_positions[:, None]
+    kp = kv_positions[None, :]
+    mask &= kp >= 0  # ring-buffer slots not yet written recover negative positions
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_valid_len is not None:
+        valid = kv_positions[None, :] < kv_valid_len[:, None]  # (B, Skv)
+        scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(p, v)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 256,
+) -> jax.Array:
+    """Self-attention over aligned positions 0..S-1 with bounded memory.
+
+    Scans over query tiles; the scan body is rematerialized so backward
+    recomputes the (block_q x S) score tile instead of saving all of them.
+    """
+    b, s, hq, d = q.shape
+    if s <= block_q:
+        pos = jnp.arange(s)
+        return dot_attention(
+            q, k, v, q_positions=pos, kv_positions=pos, causal=causal, window=window
+        )
+    assert s % block_q == 0, (s, block_q)
+    nblk = s // block_q
+    kv_pos = jnp.arange(s)
+    qb = jnp.moveaxis(q.reshape(b, nblk, block_q, hq, d), 1, 0)  # (nblk, B, bq, H, D)
+
+    @jax.checkpoint
+    def body(carry, args):
+        i, qblk = args
+        qpos = i * block_q + jnp.arange(block_q)
+        out = dot_attention(
+            qblk, k, v, q_positions=qpos, kv_positions=kv_pos, causal=causal, window=window
+        )
+        return carry, out
+
+    _, outs = jax.lax.scan(body, 0, (jnp.arange(nblk), qb))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, hq, d)
+
+
+def attn_apply(
+    params,
+    x: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "train",
+    kv_x: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence (train / prefill) attention. x: (B, S, D)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    src = x if kv_x is None else kv_x
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], src, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], src, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    if not cfg.cross:
+        pos = jnp.arange(s)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, jnp.arange(k.shape[1]), cfg.rope_theta)
+        q, k, v, hq_orig = _maybe_pad_heads(q, k, v, cfg)
+        out = blockwise_attention(
+            q, k, v, causal=cfg.causal, window=cfg.window, block_q=cfg.block_q
+        )
+        out = out[:, :, :hq_orig]
+    else:
+        skv = k.shape[1]
+        out = dot_attention(
+            q,
+            k,
+            v,
+            q_positions=jnp.arange(s),
+            kv_positions=jnp.arange(skv),
+            causal=False,
+        )
+    return linear_apply(params["wo"], out.reshape(b, s, -1), spec, phase=phase)
+
+
+def attn_prefill(
+    params,
+    x: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    max_len: int,
+    phase: str = "serve",
+    quantized: bool = False,
+    cache_dtype=jnp.bfloat16,
+):
+    """Full-prompt attention that also emits the KV cache for decode.
+
+    Returns (y, cache). Cache layout matches init_kv_cache/attn_decode_step:
+    full cache of length ``max_len`` written at slots [0, S) — or, with SWA,
+    a ring of length L = min(window, max_len) holding the last L positions
+    (requires S % L == 0 or S <= L so ring slots line up with positions).
+    """
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    pos = jnp.arange(s)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)  # cache stores post-RoPE keys
+    out = blockwise_attention(q, k, v, causal=cfg.causal, window=cfg.window, block_q=cfg.block_q)
+    y = linear_apply(params["wo"], out.reshape(b, s, -1), spec, phase=phase)
+
+    length = min(max_len, cfg.window) if cfg.window is not None else max_len
+    if cfg.window is not None and s > length:
+        assert s % length == 0, (s, length)
+        kc, vc = k[:, -length:], v[:, -length:]
+    elif s < length:
+        padw = ((0, 0), (0, length - s), (0, 0), (0, 0))
+        kc, vc = jnp.pad(k, padw), jnp.pad(v, padw)
+    else:
+        kc, vc = k[:, -length:], v[:, -length:]
+    if quantized:
+        kq, ks = _quantize_kv(kc)
+        vq, vs = _quantize_kv(vc)
+        cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    else:
+        cache = {"k": kc.astype(cache_dtype), "v": vc.astype(cache_dtype)}
+    return y, cache
+
+
+# ---------------------------------------------------------------------------
+# KV caches (full + SWA ring) and single-token decode
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(
+    batch: int, cfg: AttnConfig, max_len: int, dtype=jnp.bfloat16, quantized: bool = False
+):
+    """Cache pytree. With ``quantized`` keys/values are int8 + per-(pos,head)
+    scales (the int8-KV optimization; see EXPERIMENTS.md §Perf)."""
+    length = min(max_len, cfg.window) if cfg.window is not None else max_len
+    shape = (batch, length, cfg.n_kv_heads, cfg.head_dim)
+    if quantized:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+            "v_scale": jnp.zeros(shape[:-1] + (1,), jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _quantize_kv(x: jax.Array):
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attn_decode_step(
+    params,
+    x: jax.Array,
+    cache,
+    position: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "serve",
+):
+    """One-token decode. x: (B, 1, D); position: scalar int32 (same for batch).
+
+    Full cache: write at index ``position``.  SWA: ring buffer of size
+    ``window`` written at ``position % window``; positions are recovered from
+    slot indices for the RoPE-consistent mask (keys are stored post-RoPE).
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    pos = jnp.full((1,), position, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    slot = position % cache_len if cfg.window is not None else position
+    quantized = "k_scale" in cache
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0, 0)),
+        }
+        k_all = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_all = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)),
+        }
+        k_all = new_cache["k"].astype(x.dtype)
+        v_all = new_cache["v"].astype(x.dtype)
+
+    slots = jnp.arange(cache_len)
+    if cfg.window is not None:
+        # slot s holds token position p - ((p - s) mod L), the most recent
+        # position congruent to s (ring buffer; L == min(window, max_len)).
+        kv_positions = position - jnp.mod(position - slots, cache_len)
+        # unwritten slots recover negative positions and are masked in dot_attention
+        valid_len = None
+    else:
+        kv_positions = slots
+        valid_len = jnp.full((b,), position + 1, jnp.int32)
+
+    out = dot_attention(
+        q,
+        k_all,
+        v_all,
+        q_positions=pos,
+        kv_positions=kv_positions,
+        causal=True,
+        window=cfg.window,
+        kv_valid_len=valid_len,
+    )
+    y = linear_apply(params["wo"], out.reshape(b, 1, -1), spec, phase=phase)
+    return y, new_cache

@@ -1,0 +1,61 @@
+"""Conv/pool layers for the paper's CNV model (VGG-like on CIFAR).
+
+Convs in non-dense modes go through im2col + the switchable linear backend,
+so BiKAConv2d / binarized conv / int8 conv share one implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .linear import LinearSpec, linear_apply, linear_init
+
+__all__ = ["conv2d_init", "conv2d_apply", "maxpool2d"]
+
+
+def conv2d_init(
+    key: jax.Array,
+    c_in: int,
+    c_out: int,
+    spec: LinearSpec,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    phase: str = "train",
+):
+    return linear_init(key, c_in * kh * kw, c_out, spec, axes=(None, None), phase=phase)
+
+
+def conv2d_apply(
+    params,
+    x: jax.Array,
+    spec: LinearSpec,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    padding: str = "SAME",
+    phase: str = "train",
+) -> jax.Array:
+    """x: (B, H, W, C) -> (B, H', W', C_out) via im2col + linear backend."""
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    b, ho, wo, kdim = patches.shape
+    y = linear_apply(params, patches.reshape(b * ho * wo, kdim), spec, phase=phase)
+    return y.reshape(b, ho, wo, -1)
+
+
+def maxpool2d(x: jax.Array, window: int = 2, stride: int = 2, padding: str = "SAME") -> jax.Array:
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
+        jax.lax.max,
+        (1, window, window, 1),
+        (1, stride, stride, 1),
+        padding,
+    )

@@ -1,0 +1,26 @@
+"""Token embedding and output head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import P
+
+__all__ = ["embed_init", "embed_apply", "unembed_apply"]
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32):
+    table = jax.random.normal(key, (vocab, d), dtype) * 0.02
+    return {"table": P(table, ("vocab", "embed"))}
+
+
+def embed_apply(params, tokens: jax.Array, compute_dtype=None) -> jax.Array:
+    t = params["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed_apply(params, x: jax.Array) -> jax.Array:
+    """Tied output head: logits = x @ table.T (fp32 for softmax stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32), params["table"].astype(jnp.float32))

@@ -1,0 +1,60 @@
+"""Feed-forward blocks: SwiGLU (llama family), gated/ungated variants,
+squared-ReLU (nemotron). Projections use the switchable linear backend."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.constraints import constrain
+from .linear import LinearSpec, linear_apply, linear_init
+
+__all__ = ["mlp_init", "mlp_apply"]
+
+
+def _act(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":  # squared ReLU (nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def mlp_init(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    spec: LinearSpec,
+    *,
+    gated: bool = True,
+    phase: str = "train",
+):
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": linear_init(ks[0], d_model, d_ff, spec, axes=("embed", "ffn"), phase=phase),
+        "down": linear_init(ks[1], d_ff, d_model, spec, axes=("ffn", "embed"), phase=phase),
+    }
+    if gated:
+        p["gate"] = linear_init(ks[2], d_model, d_ff, spec, axes=("embed", "ffn"), phase=phase)
+    return p
+
+
+def mlp_apply(
+    params,
+    x: jax.Array,
+    spec: LinearSpec,
+    *,
+    activation: str = "silu",
+    phase: str = "train",
+) -> jax.Array:
+    up = linear_apply(params["up"], x, spec, phase=phase)
+    if "gate" in params:
+        gate = linear_apply(params["gate"], x, spec, phase=phase)
+        h = _act(activation, gate) * up
+    else:
+        h = _act(activation, up)
+    h = constrain(h, ("batch",) + (None,) * (h.ndim - 2) + ("ffn",))
+    y = linear_apply(params["down"], h, spec, phase=phase)
+    return constrain(y, ("batch",) + (None,) * (y.ndim - 2) + (None,))

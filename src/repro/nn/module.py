@@ -1,0 +1,70 @@
+"""Minimal functional module system with logical sharding axes.
+
+Every parameter is created as a ``P(value, axes)`` box where ``axes`` is a
+tuple of *logical* axis names (one per array dim, ``None`` = replicated).
+``unbox``/``axes_of`` split a boxed tree into a plain value tree plus a
+parallel axis tree; the distributed layer maps logical names onto mesh axes
+(t5x/MaxText-style "logical axis rules").
+
+Init functions run under ``jax.eval_shape`` for the dry-run, so parameter
+trees exist as ShapeDtypeStructs without any host allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["P", "unbox", "axes_of", "boxed_like", "count_params", "param_bytes"]
+
+Axes = Optional[Tuple[Optional[str], ...]]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class P:
+    """A parameter box: array value + logical axis names (static aux data)."""
+
+    value: Any
+    axes: Axes = None
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+
+def _is_box(x) -> bool:
+    return isinstance(x, P)
+
+
+def unbox(tree):
+    """Boxed tree -> plain value tree."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=_is_box)
+
+
+def axes_of(tree):
+    """Boxed tree -> parallel tree of logical-axes tuples."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=_is_box)
+
+
+def boxed_like(values, axes):
+    """Zip a value tree and an axes tree back into a boxed tree."""
+    return jax.tree_util.tree_map(P, values, axes)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return sum(int(jnp.size(l)) if hasattr(l, "shape") else 0 for l in leaves)
+
+
+def param_bytes(tree) -> int:
+    total = 0
+    for l in jax.tree_util.tree_leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(jnp.size(l)) * jnp.dtype(l.dtype).itemsize
+    return total

@@ -1,0 +1,187 @@
+"""Top-k mixture-of-experts (GShard/Switch-style dispatch) for grok/mixtral.
+
+Routing math stays fp32 (softmax ordering); expert FFNs run through the
+switchable linear backend via vmap over the expert axis, so MoE works in
+dense / bika / bnn / qnn8 modes uniformly.
+
+Dispatch is capacity-based: each expert processes at most C = ceil(T*k/E *
+capacity_factor) tokens; overflow tokens are dropped (standard on TPU — dense
+shapes, no dynamic gather). Compute is proportional to E*C, i.e. top-k sparse,
+not dense-all-experts.
+
+Parallelism: default is TP-inside-expert — expert weights (E, D, F) shard F
+over "model" (E=8 does not divide the 16-way model axis; DESIGN.md §5).
+``expert_axis="expert"`` instead shards E over a mesh axis (EP) when the mesh
+provides one that divides E.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .linear import LinearSpec, linear_apply, linear_init
+from .module import P, unbox
+
+__all__ = ["MoEConfig", "moe_init", "moe_apply"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    gated: bool = True
+    activation: str = "silu"
+    expert_axis: Optional[str] = None  # None = TP-inside-expert
+
+
+def moe_init(
+    key: jax.Array,
+    d_model: int,
+    d_ff: int,
+    cfg: MoEConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "train",
+):
+    kr, ke = jax.random.split(key)
+    # router stays dense fp (DESIGN.md §6)
+    router_spec = dataclasses.replace(spec, mode="dense")
+    router = linear_init(kr, d_model, cfg.n_experts, router_spec, axes=("embed", None))
+
+    # stack expert FFN params along a leading expert axis
+    ekeys = jax.random.split(ke, cfg.n_experts)
+
+    def one_expert(k):
+        from .mlp import mlp_init
+
+        return mlp_init(k, d_model, d_ff, spec, gated=cfg.gated, phase=phase)
+
+    stacked_vals = jax.vmap(lambda k: unbox(one_expert(k)))(ekeys)
+    template = one_expert(ekeys[0])  # boxed tree used only for axis names
+    boxed = jax.tree_util.tree_map(
+        lambda tpl, v: P(
+            v, (cfg.expert_axis,) + tuple(tpl.axes if tpl.axes else (None,) * (v.ndim - 1))
+        ),
+        template,
+        stacked_vals,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return {"router": router, "experts": boxed}
+
+
+def _route(logits: jax.Array, cfg: MoEConfig, capacity: int):
+    """Top-k routing with capacity. logits: (T, E) fp32.
+
+    Returns dispatch (T, E, C) one-hot and combine (T, E, C) gate weights.
+    """
+    t, e = logits.shape
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, cfg.top_k)  # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)  # renormalize over top-k
+
+    dispatch = jnp.zeros((t, e, capacity), logits.dtype)
+    combine = jnp.zeros((t, e, capacity), logits.dtype)
+    for j in range(cfg.top_k):
+        mask_te = jax.nn.one_hot(topi[:, j], e, dtype=logits.dtype)  # (T, E)
+        # position of each token within its expert's queue (j-th choices after
+        # all previous choices' assignments)
+        prev = dispatch.sum(axis=2)  # (T, E) — tokens already placed per (t,e)
+        pos = jnp.cumsum(mask_te, axis=0) - 1 + prev.sum(axis=0, keepdims=True)
+        keep = (pos < capacity) & (mask_te > 0)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=logits.dtype)
+        d_j = jnp.where(keep[..., None], mask_te[..., None] * pos_oh, 0.0)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * topw[:, j][:, None, None]
+    aux = _load_balance_loss(gates, topi, e)
+    return dispatch, combine, aux
+
+
+def _load_balance_loss(gates: jax.Array, topi: jax.Array, e: int) -> jax.Array:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    me = jnp.mean(gates, axis=0)  # router prob mass per expert
+    ce = jnp.mean(jax.nn.one_hot(topi[:, 0], e), axis=0)  # top-1 assignment frac
+    return e * jnp.sum(me * ce)
+
+
+def _route_sparse(logits: jax.Array, cfg: MoEConfig, capacity: int):
+    """Top-k routing returning scatter/gather indices — O(T*k*E) index math
+    instead of the O(T^2 * D)-class one-hot dispatch matmuls (at 131k tokens
+    per microbatch the einsum dispatch was 78% of grok-1's total train FLOPs;
+    see EXPERIMENTS.md §Perf).
+
+    Returns (slot (T, k) int32 in [0, E*C] with E*C = dropped sentinel,
+             gates (T, k) fp32 renormalized over the top-k, aux loss).
+    """
+    t, e = logits.shape
+    gates = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(gates, cfg.top_k)  # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # queue position of each (token, choice) within its expert: rank among
+    # all assignments to that expert, j-major (first choices get priority).
+    flat_e = topi.T.reshape(-1)  # (kT,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (kT, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    flat_pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = flat_pos < capacity
+    slot = jnp.where(keep, flat_e * capacity + flat_pos, e * capacity)
+    slot = slot.reshape(cfg.top_k, t).T  # (T, k)
+    aux = _load_balance_loss(gates, topi, e)
+    return slot.astype(jnp.int32), topw, aux
+
+
+def moe_apply(
+    params,
+    x: jax.Array,
+    cfg: MoEConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "train",
+    dispatch: str = "scatter",
+):
+    """x: (B, S, D) -> (y, aux_loss).
+
+    dispatch='scatter' (default): gather tokens into (E, C, D) expert queues
+    by index and combine with a (T, k) weighted gather-back. 'einsum' keeps
+    the GShard one-hot-matmul dispatch for A/B roofline measurements.
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = linear_apply(
+        params["router"], xt, dataclasses.replace(spec, mode="dense"), phase=phase
+    ).astype(jnp.float32)
+    capacity = max(1, int(t * cfg.top_k / cfg.n_experts * cfg.capacity_factor))
+
+    from .mlp import mlp_apply
+
+    def expert_fn(ep, xc):
+        return mlp_apply(ep, xc, spec, activation=cfg.activation, phase=phase)
+
+    if dispatch == "einsum":
+        disp, comb, aux = _route(logits, cfg, capacity)
+        xe = jnp.einsum("tec,td->ecd", disp.astype(x.dtype), xt)
+        ye = jax.vmap(expert_fn)(params["experts"], xe)
+        yt = jnp.einsum("tec,ecd->td", comb.astype(x.dtype), ye)
+        return yt.reshape(b, s, d), aux
+
+    slot, gates, aux = _route_sparse(logits, cfg, capacity)  # (T, k) each
+    ec = cfg.n_experts * capacity
+    # expert-slot -> token index map (sentinel row t = zero padding)
+    slot_to_tok = jnp.full((ec + 1,), t, jnp.int32)
+    flat_slot = slot.reshape(-1)
+    flat_tok = jnp.broadcast_to(
+        jnp.arange(t, dtype=jnp.int32)[:, None], slot.shape
+    ).reshape(-1)
+    slot_to_tok = slot_to_tok.at[flat_slot].set(flat_tok, mode="drop")
+    xpad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], axis=0)
+    xe = jnp.take(xpad, slot_to_tok[:ec], axis=0).reshape(cfg.n_experts, capacity, d)
+    ye = jax.vmap(expert_fn)(params["experts"], xe)  # (E, C, D)
+    ye_flat = jnp.concatenate([ye.reshape(ec, d), jnp.zeros((1, d), ye.dtype)], axis=0)
+    picked = jnp.take(ye_flat, slot.reshape(-1), axis=0).reshape(t, cfg.top_k, d)
+    yt = jnp.sum(picked * gates[..., None].astype(picked.dtype), axis=1)
+    return yt.reshape(b, s, d), aux

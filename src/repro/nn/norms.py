@@ -1,0 +1,38 @@
+"""Normalization layers. Kept in float (the paper binarizes projection
+arithmetic, not normalization — see DESIGN.md §6)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .module import P
+
+__all__ = ["rmsnorm_init", "rmsnorm_apply", "layernorm_init", "layernorm_apply"]
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": P(jnp.ones((d,), dtype), ("embed",))}
+
+
+def rmsnorm_apply(params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {
+        "scale": P(jnp.ones((d,), dtype), ("embed",)),
+        "bias": P(jnp.zeros((d,), dtype), ("embed",)),
+    }
+
+
+def layernorm_apply(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)).astype(dt)

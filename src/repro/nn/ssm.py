@@ -1,0 +1,190 @@
+"""Mamba2-style selective state-space block (for zamba2).
+
+Simplified SSD recurrence, faithful to the Mamba2 state update:
+
+    h_t = exp(-dt_t * A) * h_{t-1} + dt_t * (x_t  B_t^T)      (outer product)
+    y_t = h_t C_t + D * x_t
+
+with per-head scalar A, input-dependent (B_t, C_t, dt_t), causal depthwise
+conv on the input stream, and a gated output.  The recurrence multiplies are
+*state* arithmetic and stay fp (DESIGN.md §6); the in/out projections run
+through the switchable linear backend (BiKA-izable).
+
+Train path: lax.scan over time (compact HLO — compile cost independent of
+seq). Decode path: single-step update with the state carried in the cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .linear import LinearSpec, linear_apply, linear_init
+from .module import P
+
+__all__ = ["SSMConfig", "ssm_init", "ssm_apply", "ssm_decode_step", "init_ssm_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 64
+    expand: int = 2
+    head_dim: int = 64
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def ssm_init(key: jax.Array, cfg: SSMConfig, spec: LinearSpec, *, phase: str = "train"):
+    ks = jax.random.split(key, 4)
+    di, n = cfg.d_inner, cfg.d_state
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (heads)]
+    d_in_proj = 2 * di + 2 * n + cfg.n_heads
+    p = {
+        "in_proj": linear_init(
+            ks[0], cfg.d_model, d_in_proj, spec, axes=("embed", "ssm_inner"), phase=phase
+        ),
+        "out_proj": linear_init(
+            ks[1], di, cfg.d_model, spec, axes=("ssm_inner", "embed"), phase=phase
+        ),
+        "conv_w": P(
+            jax.random.normal(ks[2], (cfg.conv_width, di + 2 * n), jnp.float32) * 0.1,
+            (None, "ssm_inner"),
+        ),
+        "A_log": P(
+            jnp.log(jnp.linspace(1.0, 16.0, cfg.n_heads).astype(jnp.float32)), ("ssm_heads",)
+        ),
+        "D": P(jnp.ones((cfg.n_heads,), jnp.float32), ("ssm_heads",)),
+        "dt_bias": P(jnp.zeros((cfg.n_heads,), jnp.float32), ("ssm_heads",)),
+        "norm_scale": P(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+    }
+    return p
+
+
+def _split_in_proj(zxbcdt: jax.Array, cfg: SSMConfig):
+    di, n = cfg.d_inner, cfg.d_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    # sum_j w[j, c] * x[t - (W-1) + j, c]
+    out = sum(pad[:, j : j + xbc.shape[1], :] * w[j] for j in range(width))
+    return out
+
+
+def _heads(x: jax.Array, cfg: SSMConfig) -> jax.Array:
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def _ssd_step(h, inputs, A):
+    """h: (B, H, P, N). One SSD recurrence step (shared by scan and decode)."""
+    xt, bt, ct, dtt = inputs  # (B,H,P), (B,N), (B,N), (B,H)
+    decay = jnp.exp(-dtt * A)[..., None, None]  # (B,H,1,1)
+    inject = (dtt[..., None] * xt)[..., None] * bt[:, None, None, :]  # (B,H,P,N)
+    h_new = decay * h + inject
+    y = jnp.einsum("bhpn,bn->bhp", h_new, ct)
+    return h_new, y
+
+
+def ssm_apply(
+    params,
+    x: jax.Array,
+    cfg: SSMConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "train",
+    return_state: bool = False,
+):
+    """x: (B, S, D) -> (B, S, D); with return_state also the decode state."""
+    b, s, _ = x.shape
+    zxbcdt = linear_apply(params["in_proj"], x, spec, phase=phase)
+    z, xbc, dt = _split_in_proj(zxbcdt, cfg)
+    xbc_raw = xbc
+    xbc = jax.nn.silu(_causal_conv(xbc.astype(jnp.float32), params["conv_w"]))
+    xs = _heads(xbc[..., : cfg.d_inner], cfg)  # (B,S,H,P)
+    bs = xbc[..., cfg.d_inner : cfg.d_inner + cfg.d_state]  # (B,S,N)
+    cs = xbc[..., cfg.d_inner + cfg.d_state :]  # (B,S,N)
+    dts = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = jnp.exp(params["A_log"])  # (H,)
+
+    def body(h, t_in):
+        return _ssd_step(h, t_in, A)
+
+    h0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.d_state), jnp.float32)
+    seq_in = (
+        jnp.moveaxis(xs, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(bs, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(cs, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dts, 1, 0),
+    )
+    h_fin, ys = jax.lax.scan(body, h0, seq_in)  # (S,B,H,P)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, cfg.d_inner)
+    y = y + np_d_skip(params["D"], xs)
+    y = _gated_rmsnorm(y, z.astype(jnp.float32), params["norm_scale"])
+    out = linear_apply(params["out_proj"], y.astype(x.dtype), spec, phase=phase)
+    if not return_state:
+        return out
+    # conv rolling window holds the last (W-1) *pre-conv* inputs
+    w1 = cfg.conv_width - 1
+    conv = xbc_raw[:, -w1:].astype(jnp.float32)
+    if s < w1:
+        conv = jnp.pad(conv, ((0, 0), (w1 - s, 0), (0, 0)))
+    return out, {"h": h_fin, "conv": conv}
+
+
+def np_d_skip(d: jax.Array, xs: jax.Array) -> jax.Array:
+    """D * x skip connection, flattened back to (B,S,di)."""
+    y = d[:, None] * xs.astype(jnp.float32)  # (B,S,H,P)
+    return y.reshape(xs.shape[0], xs.shape[1], -1)
+
+
+def _gated_rmsnorm(y: jax.Array, z: jax.Array, scale: jax.Array, eps: float = 1e-6):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale
+
+
+def init_ssm_state(batch: int, cfg: SSMConfig, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def ssm_decode_step(params, x: jax.Array, state, cfg: SSMConfig, spec: LinearSpec, *, phase="serve"):
+    """One-token step. x: (B, 1, D); state: {'h', 'conv'} -> (y, new_state)."""
+    b = x.shape[0]
+    zxbcdt = linear_apply(params["in_proj"], x, spec, phase=phase)
+    z, xbc, dt = _split_in_proj(zxbcdt[:, 0], cfg)
+    # causal conv over the rolling window [conv_state, x_t]
+    win = jnp.concatenate([state["conv"], xbc[:, None, :].astype(state["conv"].dtype)], axis=1)
+    w = params["conv_w"]
+    conv_out = jnp.sum(win * w[None], axis=1)  # (B, C)
+    xbc_t = jax.nn.silu(conv_out.astype(jnp.float32))
+    xt = _heads(xbc_t[..., : cfg.d_inner], cfg)
+    bt = xbc_t[..., cfg.d_inner : cfg.d_inner + cfg.d_state]
+    ct = xbc_t[..., cfg.d_inner + cfg.d_state :]
+    dtt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = jnp.exp(params["A_log"])
+    h_new, y = _ssd_step(state["h"].astype(jnp.float32), (xt, bt, ct, dtt), A)
+    y = y.reshape(b, -1) + (params["D"][:, None] * xt).reshape(b, -1)
+    y = _gated_rmsnorm(y, z.astype(jnp.float32), params["norm_scale"])
+    out = linear_apply(params["out_proj"], y[:, None, :].astype(x.dtype), spec, phase=phase)
+    new_state = {"h": h_new.astype(state["h"].dtype), "conv": win[:, 1:]}
+    return out, new_state

@@ -1,0 +1,222 @@
+"""xLSTM blocks (sLSTM + mLSTM) for the xlstm-125m architecture.
+
+mLSTM: matrix memory C (head_dim x head_dim per head) with stabilized
+exponential gating; parallel-friendly but implemented as a time scan (compact
+HLO). sLSTM: scalar memory with block-diagonal recurrent weights.
+
+Gating/recurrence arithmetic stays fp; all projections route through the
+switchable linear backend (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .linear import LinearSpec, linear_apply, linear_init
+from .module import P
+
+__all__ = [
+    "XLSTMConfig",
+    "mlstm_init",
+    "mlstm_apply",
+    "mlstm_decode_step",
+    "init_mlstm_state",
+    "slstm_init",
+    "slstm_apply",
+    "slstm_decode_step",
+    "init_slstm_state",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    n_heads: int = 4
+    proj_factor: float = 2.0  # mLSTM up-projection
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_inner % self.n_heads == 0
+        return self.d_inner // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key: jax.Array, cfg: XLSTMConfig, spec: LinearSpec, *, phase="train"):
+    ks = jax.random.split(key, 6)
+    d, di = cfg.d_model, cfg.d_inner
+    return {
+        "up": linear_init(ks[0], d, 2 * di, spec, axes=("embed", "ssm_inner"), phase=phase),
+        "q": linear_init(ks[1], di, di, spec, axes=("ssm_inner", "ssm_inner"), phase=phase),
+        "k": linear_init(ks[2], di, di, spec, axes=("ssm_inner", "ssm_inner"), phase=phase),
+        "v": linear_init(ks[3], di, di, spec, axes=("ssm_inner", "ssm_inner"), phase=phase),
+        "ifg": P(jax.random.normal(ks[4], (di, 2 * cfg.n_heads), jnp.float32) * 0.01,
+                 ("ssm_inner", None)),
+        "down": linear_init(ks[5], di, d, spec, axes=("ssm_inner", "embed"), phase=phase),
+        "norm_scale": P(jnp.ones((di,), jnp.float32), ("ssm_inner",)),
+    }
+
+
+def _mlstm_step(state, inputs):
+    """state: (C, n, m); inputs: (q, k, v, i_pre, f_pre) per head.
+
+    C: (B,H,P,P), n: (B,H,P), m: (B,H); q/k/v: (B,H,P); i/f pre-activations (B,H).
+    Stabilized exponential gating (xLSTM eqs. 19-27).
+    """
+    C, n, m = state
+    q, k, v, ip, fp = inputs
+    m_new = jnp.maximum(fp + m, ip)
+    i = jnp.exp(ip - m_new)[..., None]
+    f = jnp.exp(fp + m - m_new)[..., None]
+    n_new = f * n + i * k
+    C_new = f[..., None] * C + (i * v)[..., :, None] * k[..., None, :]
+    denom = jnp.maximum(jnp.abs(jnp.sum(n_new * q, axis=-1)), 1.0)[..., None]
+    h = jnp.einsum("bhpq,bhq->bhp", C_new, q) / denom
+    return (C_new, n_new, m_new), h
+
+
+def _qkv_heads(x, cfg):
+    return x.reshape(x.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+
+
+def mlstm_apply(params, x: jax.Array, cfg: XLSTMConfig, spec: LinearSpec, *, phase="train",
+                return_state: bool = False):
+    b, s, _ = x.shape
+    up = linear_apply(params["up"], x, spec, phase=phase)
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = _qkv_heads(linear_apply(params["q"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    k = _qkv_heads(linear_apply(params["k"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    k = k / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    v = _qkv_heads(linear_apply(params["v"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    ifg = xin.astype(jnp.float32) @ params["ifg"]  # (B,S,2H)
+    ip, fp = jnp.split(ifg, 2, axis=-1)
+    fp = jax.nn.log_sigmoid(fp)
+
+    C0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim, cfg.head_dim), jnp.float32)
+    n0 = jnp.zeros((b, cfg.n_heads, cfg.head_dim), jnp.float32)
+    m0 = jnp.zeros((b, cfg.n_heads), jnp.float32)
+
+    seq = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, ip, fp))
+    (Cf, nf, mf), hs = jax.lax.scan(_mlstm_step, (C0, n0, m0), seq)  # (S,B,H,P)
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, cfg.d_inner)
+    h = _rms(h, params["norm_scale"]) * jax.nn.silu(z.astype(jnp.float32))
+    out = linear_apply(params["down"], h.astype(x.dtype), spec, phase=phase)
+    if not return_state:
+        return out
+    return out, {"C": Cf, "n": nf, "m": mf}
+
+
+def _rms(y, scale, eps=1e-6):
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale
+
+
+def init_mlstm_state(batch: int, cfg: XLSTMConfig, dtype=jnp.float32):
+    return {
+        "C": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.head_dim), dtype),
+        "n": jnp.zeros((batch, cfg.n_heads, cfg.head_dim), dtype),
+        "m": jnp.zeros((batch, cfg.n_heads), dtype),
+    }
+
+
+def mlstm_decode_step(params, x, state, cfg: XLSTMConfig, spec: LinearSpec, *, phase="serve"):
+    b = x.shape[0]
+    up = linear_apply(params["up"], x[:, 0], spec, phase=phase)
+    xin, z = jnp.split(up, 2, axis=-1)
+    q = _qkv_heads(linear_apply(params["q"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    k = _qkv_heads(linear_apply(params["k"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    k = k / jnp.sqrt(jnp.asarray(cfg.head_dim, jnp.float32))
+    v = _qkv_heads(linear_apply(params["v"], xin, spec, phase=phase).astype(jnp.float32), cfg)
+    ifg = xin.astype(jnp.float32) @ params["ifg"]
+    ip, fp = jnp.split(ifg, 2, axis=-1)
+    fp = jax.nn.log_sigmoid(fp)
+    st = (state["C"].astype(jnp.float32), state["n"].astype(jnp.float32), state["m"].astype(jnp.float32))
+    (C, n, m), h = _mlstm_step(st, (q, k, v, ip, fp))
+    h = h.reshape(b, cfg.d_inner)
+    h = _rms(h, params["norm_scale"]) * jax.nn.silu(z.astype(jnp.float32))
+    y = linear_apply(params["down"], h[:, None].astype(x.dtype), spec, phase=phase)
+    return y, {"C": C.astype(state["C"].dtype), "n": n.astype(state["n"].dtype), "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key: jax.Array, cfg: XLSTMConfig, spec: LinearSpec, *, phase="train"):
+    ks = jax.random.split(key, 3)
+    d = cfg.d_model
+    hd = d // cfg.n_heads
+    return {
+        # input projections for i, f, z, o gates
+        "wx": linear_init(ks[0], d, 4 * d, spec, axes=("embed", "ssm_inner"), phase=phase),
+        # block-diagonal recurrent weights: (H, hd, 4*hd)
+        "r": P(jax.random.normal(ks[1], (cfg.n_heads, hd, 4 * hd), jnp.float32) * 0.01,
+               (None, None, None)),
+        "down": linear_init(ks[2], d, d, spec, axes=("ssm_inner", "embed"), phase=phase),
+        "norm_scale": P(jnp.ones((d,), jnp.float32), ("embed",)),
+    }
+
+
+def _slstm_step(state, inputs, r, n_heads):
+    """state: (h, c, n, m) each (B, D); inputs: wx_t (B, 4D)."""
+    h, c, n, m = state
+    b, d = h.shape
+    hd = d // n_heads
+    hh = h.reshape(b, n_heads, hd)
+    rec = jnp.einsum("bhp,hpq->bhq", hh, r).reshape(b, 4 * d)
+    pre = inputs + rec
+    ip, fp, zp, op = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(jax.nn.log_sigmoid(fp) + m, ip)
+    i = jnp.exp(ip - m_new)
+    f = jnp.exp(jax.nn.log_sigmoid(fp) + m - m_new)
+    z = jnp.tanh(zp)
+    o = jax.nn.sigmoid(op)
+    c_new = f * c + i * z
+    n_new = f * n + i
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (h_new, c_new, n_new, m_new), h_new
+
+
+def slstm_apply(params, x: jax.Array, cfg: XLSTMConfig, spec: LinearSpec, *, phase="train",
+                return_state: bool = False):
+    b, s, d = x.shape
+    wx = linear_apply(params["wx"], x, spec, phase=phase).astype(jnp.float32)  # (B,S,4D)
+    h0 = jnp.zeros((b, d), jnp.float32)
+    state0 = (h0, h0, h0, jnp.zeros((b, d), jnp.float32))
+
+    def body(st, wxt):
+        return _slstm_step(st, wxt, params["r"], cfg.n_heads)
+
+    (hf, cf, nf, mf), hs = jax.lax.scan(body, state0, jnp.moveaxis(wx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1)  # (B,S,D)
+    h = _rms(h, params["norm_scale"])
+    out = linear_apply(params["down"], h.astype(x.dtype), spec, phase=phase)
+    if not return_state:
+        return out
+    return out, {"h": hf, "c": cf, "n": nf, "m": mf}
+
+
+def init_slstm_state(batch: int, cfg: XLSTMConfig, dtype=jnp.float32):
+    z = jnp.zeros((batch, cfg.d_model), dtype)
+    return {"h": z, "c": z, "n": z, "m": z}
+
+
+def slstm_decode_step(params, x, state, cfg: XLSTMConfig, spec: LinearSpec, *, phase="serve"):
+    wx = linear_apply(params["wx"], x[:, 0], spec, phase=phase).astype(jnp.float32)
+    st = (state["h"].astype(jnp.float32), state["c"].astype(jnp.float32),
+          state["n"].astype(jnp.float32), state["m"].astype(jnp.float32))
+    (h, c, n, m), _ = _slstm_step(st, wx, params["r"], cfg.n_heads)
+    y = _rms(h, params["norm_scale"])
+    out = linear_apply(params["down"], y[:, None].astype(x.dtype), spec, phase=phase)
+    return out, {"h": h, "c": c, "n": n, "m": m}

@@ -1,0 +1,24 @@
+"""repro.optim — functional optimizers + distributed-optimization tricks."""
+from .adamw import OptimizerSpec, adamw, clip_by_global_norm, global_norm, make_optimizer, sgd
+from .compression import (
+    compressed_psum,
+    dequantize_int8,
+    error_feedback_compress,
+    quantize_int8,
+)
+from .schedule import constant, cosine_warmup
+
+__all__ = [
+    "OptimizerSpec",
+    "adamw",
+    "sgd",
+    "make_optimizer",
+    "global_norm",
+    "clip_by_global_norm",
+    "cosine_warmup",
+    "constant",
+    "quantize_int8",
+    "dequantize_int8",
+    "error_feedback_compress",
+    "compressed_psum",
+]

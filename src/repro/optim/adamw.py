@@ -1,0 +1,126 @@
+"""AdamW / SGD as functional (init, update) pairs over arbitrary pytrees,
+with global-norm clipping. Optimizer state is a plain pytree -> trivially
+sharded by distributed.zero1_shardings (ZeRO-1) and checkpointed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptimizerSpec", "adamw", "sgd", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerSpec:
+    name: str = "adamw"
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    momentum: float = 0.9  # sgd
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), tree), norm
+
+
+def adamw(spec: OptimizerSpec, lr_fn: Callable):
+    """Returns (init, update). update(grads, state, params) -> (params, state, stats)."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if spec.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, spec.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - spec.b1**t
+        bc2 = 1.0 - spec.b2**t
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m = spec.b1 * m + (1 - spec.b1) * g32
+            v = spec.b2 * v + (1 - spec.b2) * g32 * g32
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + spec.eps) + spec.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        stats = {"lr": lr, "grad_norm": gnorm}
+        return new_p, {"m": new_m, "v": new_v, "step": step}, stats
+
+    return init, update
+
+
+def sgd(spec: OptimizerSpec, lr_fn: Callable):
+    def init(params):
+        return {
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            ),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        if spec.clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, spec.clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(p, g, mu):
+            mu = spec.momentum * mu + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * mu).astype(p.dtype), mu
+
+        flat_p, treedef = jax.tree_util.tree_flatten(params)
+        flat_g = treedef.flatten_up_to(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        out = [upd(p, g, mu) for p, g, mu in zip(flat_p, flat_g, flat_mu)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        return new_p, {"mu": new_mu, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+    return init, update
+
+
+def make_optimizer(spec: OptimizerSpec):
+    from .schedule import cosine_warmup
+
+    lr_fn = cosine_warmup(spec.peak_lr, spec.warmup, spec.total_steps)
+    if spec.name == "adamw":
+        return adamw(spec, lr_fn)
+    if spec.name == "sgd":
+        return sgd(spec, lr_fn)
+    raise ValueError(spec.name)

@@ -1,0 +1,23 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["cosine_warmup", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_warmup(peak: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup to ``peak`` then cosine decay to ``floor * peak``."""
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return fn

@@ -1,0 +1,4 @@
+"""repro.serve — batched serving engine (prefill + decode w/ KV cache)."""
+from .engine import Request, ServeEngine, serve_batch
+
+__all__ = ["ServeEngine", "Request", "serve_batch"]

@@ -1,0 +1,116 @@
+"""Batched serving engine.
+
+Static-batch continuous-ish scheduler: requests queue up, the engine packs up
+to ``batch_size`` of them (padding prompts to a shared length), runs one
+jitted prefill, then jitted single-token decode steps until every request in
+the batch has finished (EOS or max_new_tokens). The decode loop is the
+``serve_step`` the decode_* / long_* dry-run cells lower.
+
+With ``phase='serve'`` the engine runs the hardware-form BiKA parameters
+(int8 thresholds + packed signs) — the TPU rendition of the paper's
+deployment story: serving weight traffic drops to ~9 bits/edge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ArchConfig, ModelAPI
+
+__all__ = ["Request", "ServeEngine", "serve_batch"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: Optional[np.ndarray] = None
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        api: ModelAPI,
+        params,
+        arch: ArchConfig,
+        *,
+        batch_size: int = 4,
+        max_len: int = 256,
+        quantized_kv: bool = False,
+    ):
+        self.api = api
+        self.params = params
+        self.arch = arch
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.quantized_kv = quantized_kv
+        self._prefill = jax.jit(
+            lambda p, batch: api.prefill(p, batch, max_len=max_len, quantized=quantized_kv)
+        )
+        self._decode = jax.jit(api.decode_step, donate_argnums=(2,))
+        self.queue: List[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _pack(self, reqs: Sequence[Request]):
+        s = max(len(r.prompt) for r in reqs)
+        s = max(s, 1)
+        toks = np.zeros((len(reqs), s), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, s - len(r.prompt):] = r.prompt  # left-pad (causal-safe)
+        return jnp.asarray(toks), s
+
+    def step_batch(self, reqs: Sequence[Request], extra_batch: Optional[Dict] = None):
+        """Prefill + greedy decode one packed batch; fills req.output."""
+        tokens, s = self._pack(reqs)
+        batch = {"tokens": tokens}
+        if extra_batch:
+            batch.update(extra_batch)
+        logits, cache = self._prefill(self.params, batch)
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        n_steps = max(r.max_new_tokens for r in reqs)
+        outs = [np.asarray(tok)[:, 0]]
+        for t in range(1, n_steps):
+            pos = jnp.asarray(s + t - 1, jnp.int32)
+            logits, cache = self._decode(self.params, tok, cache, pos)
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+            outs.append(np.asarray(tok)[:, 0])
+        gen = np.stack(outs, axis=1)  # (B, n_steps)
+        for i, r in enumerate(reqs):
+            g = gen[i, : r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.where(g == r.eos_id)[0]
+                if hits.size:
+                    g = g[: hits[0] + 1]
+            r.output = g
+        return reqs
+
+    def run(self, extra_batch: Optional[Dict] = None) -> List[Request]:
+        """Drain the queue in batch_size groups."""
+        done: List[Request] = []
+        while self.queue:
+            batch, self.queue = self.queue[: self.batch_size], self.queue[self.batch_size:]
+            done.extend(self.step_batch(batch, extra_batch))
+        return done
+
+
+def serve_batch(api: ModelAPI, params, prompts: jax.Array, *, max_new_tokens: int = 8,
+                max_len: Optional[int] = None):
+    """One-shot functional helper used by tests/benchmarks."""
+    b, s = prompts.shape
+    ml = max_len or (s + max_new_tokens)
+    logits, cache = api.prefill(params, {"tokens": prompts}, max_len=ml)
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    toks = [tok]
+    for t in range(1, max_new_tokens):
+        logits, cache = api.decode_step(params, tok, cache, jnp.asarray(s + t - 1, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)

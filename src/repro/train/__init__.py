@@ -1,0 +1,14 @@
+"""repro.train — distributed training loop with fault tolerance."""
+from .loss import softmax_xent
+from .steps import make_eval_step, make_train_step
+from .trainer import SimulatedFailure, Trainer, TrainConfig, run_with_restarts
+
+__all__ = [
+    "softmax_xent",
+    "make_train_step",
+    "make_eval_step",
+    "Trainer",
+    "TrainConfig",
+    "SimulatedFailure",
+    "run_with_restarts",
+]

@@ -1,0 +1,32 @@
+"""Losses. Softmax cross-entropy in fp32 with optional z-loss (stabilizes
+the large-vocab head) and label masking."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["softmax_xent"]
+
+
+def softmax_xent(
+    logits: jax.Array,
+    labels: jax.Array,
+    mask: Optional[jax.Array] = None,
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, dict]:
+    """logits (..., V) fp32; labels (...) int; mask (...) weights. Returns
+    (mean loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if z_loss:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

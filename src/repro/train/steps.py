@@ -1,0 +1,118 @@
+"""train_step / eval_step builders.
+
+make_train_step composes: (optional) microbatch gradient accumulation via
+lax.scan (bounded activation memory — the paper-scale models at train_4k do
+not fit a full batch of activations), MoE aux-loss weighting, NaN/Inf
+anomaly *skipping* (a bad step updates nothing but advances the counter —
+the single-step analogue of straggler/failure mitigation), and the
+functional optimizer update.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import ModelAPI
+from .loss import softmax_xent
+
+__all__ = ["make_train_step", "make_eval_step"]
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n: int):
+    def resh(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape((n, b // n) + x.shape[1:])
+
+    return jax.tree_util.tree_map(resh, batch)
+
+
+def make_train_step(
+    api: ModelAPI,
+    opt_update: Callable,
+    *,
+    aux_weight: float = 0.01,
+    z_loss: float = 1e-4,
+    microbatches: int = 1,
+    skip_nonfinite: bool = True,
+    grad_shardings=None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_fn(params, mb):
+        if api.apply_aux is not None:
+            logits, aux = api.apply_aux(params, mb)
+        else:
+            logits, aux = api.apply(params, mb), jnp.zeros((), jnp.float32)
+        loss, metrics = softmax_xent(logits, mb["labels"], mb.get("mask"), z_loss=z_loss)
+        metrics["aux_loss"] = aux
+        return loss + aux_weight * aux, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _pin(grads):
+        # ZeRO-style: pin gradients to the param/opt sharding so GSPMD
+        # reduce-scatters per-microbatch partials instead of keeping a
+        # replicated accumulator (grok-1: the replicated dw all-reduce was
+        # the dominant collective — EXPERIMENTS.md §Perf H4).
+        if grad_shardings is None:
+            return grads
+        return jax.tree_util.tree_map(
+            lambda g, sh: jax.lax.with_sharding_constraint(g, sh), grads,
+            grad_shardings)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return _pin(grads), metrics
+
+        mbs = _split_microbatches(batch, microbatches)
+
+        def acc_step(carry, mb):
+            g_acc, m_acc = carry
+            (_, metrics), grads = grad_fn(params, mb)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, _pin(grads))
+            m_acc = jax.tree_util.tree_map(jnp.add, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = _pin(jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+        m0 = {
+            "loss": jnp.zeros((), jnp.float32),
+            "accuracy": jnp.zeros((), jnp.float32),
+            "tokens": jnp.zeros((), jnp.float32),
+            "aux_loss": jnp.zeros((), jnp.float32),
+        }
+        (grads, metrics), _ = jax.lax.scan(acc_step, (g0, m0), mbs)
+        inv = 1.0 / microbatches
+        grads = _pin(jax.tree_util.tree_map(lambda g: g * inv, grads))
+        metrics = jax.tree_util.tree_map(lambda m: m * inv, metrics)
+        metrics["tokens"] = metrics["tokens"] * microbatches
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        new_params, new_opt, stats = opt_update(grads, opt_state, params)
+        metrics.update(stats)
+        if skip_nonfinite:
+            ok = jnp.isfinite(metrics["loss"]) & jnp.isfinite(stats["grad_norm"])
+            metrics["skipped"] = (~ok).astype(jnp.float32)
+            pick = lambda new, old: jax.tree_util.tree_map(
+                lambda a, b: jnp.where(ok, a, b), new, old
+            )
+            new_params = pick(new_params, params)
+            # keep the step counter advancing even on a skipped update
+            new_opt = pick(new_opt, dict(opt_state, step=new_opt["step"]))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(api: ModelAPI, *, z_loss: float = 0.0):
+    def eval_step(params, batch):
+        logits = api.apply(params, batch)
+        _, metrics = softmax_xent(logits, batch["labels"], batch.get("mask"), z_loss=z_loss)
+        return metrics
+
+    return eval_step

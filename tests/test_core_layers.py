@@ -1,0 +1,240 @@
+"""Unit + property tests for the BiKA / BNN / QNN / KAN layer math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bika, bnn, kan, qnn
+from repro.core.ste import sign, sign_ste
+
+
+# ---------------------------------------------------------------------------
+# STE
+# ---------------------------------------------------------------------------
+
+
+def test_sign_at_zero_is_plus_one():
+    """Paper Eq. 8: Sign(0) = +1 (>= comparison)."""
+    assert float(sign(jnp.asarray(0.0))) == 1.0
+
+
+def test_sign_ste_gradient_is_hardtanh_window():
+    g = jax.grad(lambda x: jnp.sum(sign_ste(x)))(jnp.asarray([-2.0, -0.5, 0.0, 0.7, 1.5]))
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+# ---------------------------------------------------------------------------
+# BiKA forward equivalences
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4),
+    k=st.integers(1, 33),
+    n=st.integers(1, 9),
+    chunk=st.sampled_from([None, 1, 3, 8, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=40, deadline=None)
+def test_bika_matmul_chunk_invariance(b, k, n, chunk, seed):
+    """The K-chunked scan path computes the identical sum as the fused path."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    full = bika.bika_matmul(x, w, beta, chunk=None)
+    chunked = bika.bika_matmul(x, w, beta, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), atol=1e-5)
+
+
+@given(
+    b=st.integers(1, 4),
+    k=st.integers(1, 24),
+    n=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=60, deadline=None)
+def test_training_form_equals_hardware_form(b, k, n, seed):
+    """sum_k Sign(w x + beta) == sum_k s * Sign(x - tau)  (Eq. 8 conversion)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, k)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    # keep |w| away from the degenerate-zero band for a clean equivalence
+    w = jnp.where(jnp.abs(w) < 1e-3, 1e-3, w)
+    beta = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+    train_y = jnp.sum(sign(x[:, :, None] * w + beta), axis=1)
+    tau, s = bika.to_hardware(w, beta)
+    hw_y = bika.bika_matmul_hw(x, tau, s).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(train_y), np.asarray(hw_y), atol=0)
+
+
+def test_to_hardware_degenerate_zero_weight():
+    """w == 0 edges contribute a constant Sign(beta)."""
+    x = jnp.asarray([[-5.0], [5.0]])
+    w = jnp.asarray([[0.0]])
+    beta = jnp.asarray([[-2.0]])
+    tau, s = bika.to_hardware(w, beta)
+    y = bika.bika_matmul_hw(x, tau, s)
+    np.testing.assert_array_equal(np.asarray(y), [[-1], [-1]])
+
+
+def test_saturating_accumulator_clamps():
+    terms = jnp.ones((300, 1), jnp.int32)
+    out = bika.saturating_accumulate(terms)
+    assert int(out[0]) == 127
+    out2 = bika.saturating_accumulate(-terms)
+    assert int(out2[0]) == -128
+
+
+def test_hw_exact_equals_fast_path_when_in_range():
+    """Paper §III-B: when no intermediate sum leaves [-128,127] the saturating
+    accumulator equals the wide accumulator."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 100)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    beta = jnp.asarray(rng.normal(size=(100, 16)).astype(np.float32))
+    tau, s = bika.to_hardware(w, beta)
+    fast = bika.bika_matmul_hw(x, tau, s, hw_exact=False)
+    exact = bika.bika_matmul_hw(x, tau, s, hw_exact=True)
+    # K=100 < 127 so no intermediate can overflow: must agree exactly
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(exact))
+
+
+def test_bika_linear_grads_flow():
+    key = jax.random.PRNGKey(0)
+    params = bika.bika_linear_init(key, 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+
+    def loss(p):
+        y = bika.bika_linear_apply(p, x, bika.BikaConfig(out_scale="rsqrt_k"))
+        return jnp.mean(y**2)
+
+    g = jax.grad(loss)(params)
+    assert float(jnp.abs(g["w"]).sum()) > 0
+    assert float(jnp.abs(g["beta"]).sum()) > 0
+    assert np.all(np.isfinite(np.asarray(g["w"])))
+
+
+def test_bika_conv2d_shapes_and_values():
+    key = jax.random.PRNGKey(0)
+    params = bika.bika_conv2d_init(key, c_in=3, c_out=8, kh=3, kw=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 8, 3))
+    y = bika.bika_conv2d_apply(params, x, kh=3, kw=3)
+    assert y.shape == (2, 8, 8, 8)
+    # outputs are integer-valued sums of +/-1 over K=27 edges
+    yv = np.asarray(y)
+    assert np.all(np.abs(yv) <= 27)
+    np.testing.assert_allclose(yv, np.round(yv))
+
+
+def test_bika_m_multi_threshold():
+    key = jax.random.PRNGKey(0)
+    params = bika.bika_linear_init(key, 8, 4, m=3)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8))
+    y = bika.bika_linear_apply(params, x, bika.BikaConfig(m=3))
+    assert y.shape == (2, 4)
+    assert np.all(np.abs(np.asarray(y)) <= 3 * 8)
+
+
+# ---------------------------------------------------------------------------
+# BNN
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.integers(1, 4), k=st.integers(1, 64), n=st.integers(1, 8), seed=st.integers(0, 999)
+)
+@settings(max_examples=40, deadline=None)
+def test_xnor_popcount_identity(b, k, n, seed):
+    """dot(+/-1) == 2*popcount(XNOR) - K — the BNN PE formulation (Fig. 8)."""
+    rng = np.random.default_rng(seed)
+    xb = rng.integers(0, 2, size=(b, k))
+    wb = rng.integers(0, 2, size=(k, n))
+    pm_x = jnp.asarray(2 * xb - 1, jnp.float32)
+    pm_w = jnp.asarray(2 * wb - 1, jnp.float32)
+    ref = bnn.bnn_matmul(pm_x, pm_w)
+    hw = bnn.xnor_popcount_dot(jnp.asarray(xb, jnp.int32), jnp.asarray(wb, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(ref).astype(int), np.asarray(hw))
+
+
+def test_bnn_layer_outputs_binary():
+    key = jax.random.PRNGKey(0)
+    p = bnn.bnn_linear_init(key, 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+    y = bnn.bnn_linear_apply(p, x)
+    assert set(np.unique(np.asarray(y))) <= {-1.0, 1.0}
+
+
+# ---------------------------------------------------------------------------
+# QNN / FINN-R threshold requantization
+# ---------------------------------------------------------------------------
+
+
+@given(
+    mscale=st.floats(min_value=0.0009765625, max_value=0.5, allow_nan=False, width=32),
+    seed=st.integers(0, 999),
+)
+@settings(max_examples=60, deadline=None)
+def test_threshold_requant_equals_arith(mscale, seed):
+    """FINN-R: counting passed thresholds == clip(round(acc*M)). Property-tested
+    over random int32 accumulators and requant scales."""
+    rng = np.random.default_rng(seed)
+    acc = jnp.asarray(rng.integers(-(2**14), 2**14, size=(64,)), jnp.int32)
+    thrs = qnn.requant_thresholds(float(mscale), bits=8)
+    got = qnn.requant_threshold_form(acc, thrs)
+    want = qnn.requant_arith(acc, jnp.asarray(mscale), bits=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_qnn_fake_quant_grids():
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32))
+    wq = qnn.fake_quant_weights(w)
+    scale = np.max(np.abs(np.asarray(w)), axis=0, keepdims=True) / 127
+    grid = np.asarray(wq) / scale
+    np.testing.assert_allclose(grid, np.round(grid), atol=1e-4)
+    assert np.abs(grid).max() <= 127
+
+
+def test_qnn_layer_runs_and_grads():
+    key = jax.random.PRNGKey(0)
+    p = qnn.qnn_linear_init(key, 16, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16))
+
+    def loss(p):
+        return jnp.mean(qnn.qnn_linear_apply(p, x) ** 2)
+
+    g = jax.grad(loss)(p)
+    assert np.isfinite(np.asarray(g["w"])).all()
+    assert float(jnp.abs(g["w"]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# KAN
+# ---------------------------------------------------------------------------
+
+
+def test_bspline_partition_of_unity():
+    """Order-k B-spline basis sums to 1 inside the grid interior."""
+    x = jnp.linspace(-0.95, 0.95, 64)
+    basis = kan.bspline_basis(x, -1.0, 1.0, grid=5, order=3)
+    np.testing.assert_allclose(np.asarray(basis.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_kan_layer_shapes_and_grads():
+    key = jax.random.PRNGKey(0)
+    p = kan.kan_linear_init(key, 8, 4)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (4, 8), minval=-0.9, maxval=0.9)
+    y = kan.kan_linear_apply(p, x)
+    assert y.shape == (4, 4)
+    g = jax.grad(lambda p: jnp.mean(kan.kan_linear_apply(p, x) ** 2))(p)
+    assert float(jnp.abs(g["coef"]).sum()) > 0
+
+
+def test_kan_edge_fn_matches_layer():
+    key = jax.random.PRNGKey(0)
+    p = kan.kan_linear_init(key, 3, 2)
+    x = jnp.asarray([[0.3, -0.2, 0.5]])
+    y = kan.kan_linear_apply(p, x)
+    manual = sum(float(kan.kan_edge_fn(p, k, 0)(x[0, k])) for k in range(3))
+    np.testing.assert_allclose(float(y[0, 0]), manual, rtol=1e-5)

@@ -1,0 +1,51 @@
+"""hwsim model vs paper Table III: absolutes within tolerance, headline
+ratio claims reproduced."""
+import pytest
+
+from repro.hwsim import (
+    PAPER_TABLE3,
+    adp,
+    array_resources,
+    calibrate_latency,
+    latency_us,
+    pdp,
+)
+
+
+@pytest.mark.parametrize("mode", ["bika", "bnn", "qnn"])
+def test_lut_model_within_3pct(mode):
+    r = array_resources(mode)
+    p = PAPER_TABLE3[mode]
+    assert abs(r["LUT"] / p["LUT"] - 1) < 0.03, (r["LUT"], p["LUT"])
+    assert abs(r["FF"] / p["FF"] - 1) < 0.03
+
+
+def test_headline_lut_reductions():
+    b, n, q = (array_resources(m)["LUT"] for m in ("bika", "bnn", "qnn"))
+    assert abs(100 * (1 - b / n) - 27.73) < 2.0  # paper: -27.73% vs BNN
+    assert abs(100 * (1 - b / q) - 51.54) < 2.0  # paper: -51.54% vs QNN
+
+
+@pytest.mark.parametrize("mode", ["bika", "bnn", "qnn"])
+@pytest.mark.parametrize("net", ["tfc", "sfc", "lfc"])
+def test_latency_model_within_5pct(mode, net):
+    models = calibrate_latency()
+    pred = latency_us(mode, net, models)
+    act = PAPER_TABLE3[mode]["latency_us"][net]
+    assert abs(pred / act - 1) < 0.05, (mode, net, pred, act)
+
+
+def test_bika_vs_qnn_speedup_range():
+    models = calibrate_latency()
+    sp = [latency_us("qnn", n, models) / latency_us("bika", n, models)
+          for n in ("tfc", "sfc", "lfc")]
+    assert 2.0 < min(sp) and max(sp) < 3.5  # paper: 2.17x - 3.30x
+
+
+def test_bnn_simd_is_fastest_and_bika_best_adp_pdp():
+    models = calibrate_latency()
+    for net in ("tfc", "sfc", "lfc"):
+        assert latency_us("bnn", net, models) < latency_us("bika", net, models)
+        assert latency_us("bnn", net, models) < latency_us("qnn", net, models)
+    assert adp("bika") < min(adp("bnn"), adp("qnn"))
+    assert pdp("bika") < min(pdp("bnn"), pdp("qnn"))

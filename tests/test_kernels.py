@@ -1,0 +1,186 @@
+"""Per-kernel allclose sweeps vs ref.py oracles (interpret=True on CPU), plus
+gradient checks for the custom-VJP training op and the tiled XLA paths.
+
+STE boundary note: the hard-tanh mask 1[|pre|<=1] flips under fp
+reassociation when |pre| is within float-eps of 1. Comparisons exclude those
+measure-zero boundary elements (they are genuinely order-dependent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bika as bc
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _case(m, k, n, seed=0, scale=0.5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    x = jax.random.normal(ks[0], (m, k))
+    tau = jax.random.normal(ks[1], (k, n))
+    s = jnp.sign(jax.random.normal(ks[2], (k, n)))
+    w = jax.random.normal(ks[3], (k, n)) * scale
+    beta = jax.random.normal(ks[4], (k, n)) * scale
+    g = jax.random.normal(ks[5], (m, n))
+    return x, tau, s, w, beta, g
+
+
+def _nonboundary_mask(x, w, beta, eps=1e-4):
+    pre = x[:, :, None] * w[None] + beta[None]
+    return jnp.abs(jnp.abs(pre) - 1.0) > eps
+
+
+SHAPES = [(8, 16, 8), (33, 100, 17), (64, 512, 128), (128, 384, 256), (300, 1000, 70)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_cac_hw_kernel_matches_ref(m, k, n):
+    x, tau, s, *_ = _case(m, k, n, seed=m)
+    y = ops.cac_matmul(x, tau, s)
+    np.testing.assert_allclose(y, ref.cac_matmul_ref(x, tau, s), atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cac_hw_kernel_dtypes(dtype):
+    x, tau, s, *_ = _case(32, 64, 48)
+    y = ops.cac_matmul(x.astype(dtype), tau.astype(dtype), s.astype(dtype))
+    yr = ref.cac_matmul_ref(
+        x.astype(dtype).astype(jnp.float32),
+        tau.astype(dtype).astype(jnp.float32),
+        s.astype(dtype).astype(jnp.float32),
+    )
+    np.testing.assert_allclose(y, yr, atol=1e-5)
+
+
+def test_cac_hw_kernel_int8_grid():
+    """int8 activations/thresholds (the deployment datapath)."""
+    ks = jax.random.split(KEY, 3)
+    x = jax.random.randint(ks[0], (40, 72), -128, 128).astype(jnp.float32)
+    tau = jax.random.randint(ks[1], (72, 24), -128, 128).astype(jnp.float32)
+    s = jnp.sign(jax.random.normal(ks[2], (72, 24)))
+    np.testing.assert_allclose(
+        ops.cac_matmul(x, tau, s), ref.cac_matmul_ref(x, tau, s), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_cac_train_fwd_matches_ref(m, k, n):
+    x, _, _, w, beta, _ = _case(m, k, n, seed=m + 1)
+    y = ops.cac_train_matmul(x, w, beta)
+    np.testing.assert_allclose(y, ref.cac_train_fwd_ref(x, w, beta), atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:4])
+def test_cac_train_bwd_matches_ref(m, k, n):
+    x, _, _, w, beta, g = _case(m, k, n, seed=m + 2)
+    dx, dw, db = jax.vjp(ops.cac_train_matmul, x, w, beta)[1](g)
+    dxr, dwr, dbr = ref.cac_train_bwd_ref(x, w, beta, g)
+    nb = np.asarray(_nonboundary_mask(x, w, beta))
+    nbk = nb.all(axis=2)  # (m, k): rows with no boundary element over n
+    nbn = nb.all(axis=0)  # (k, n)
+    np.testing.assert_allclose(np.where(nbk, dx, 0), np.where(nbk, dxr, 0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.where(nbn, dw, 0), np.where(nbn, dwr, 0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.where(nbn, db, 0), np.where(nbn, dbr, 0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_cac_train_batch_dims():
+    x = jax.random.normal(KEY, (4, 6, 32))
+    w = jax.random.normal(KEY, (32, 16)) * 0.3
+    beta = jnp.zeros((32, 16))
+    y = ops.cac_train_matmul(x, w, beta)
+    assert y.shape == (4, 6, 16)
+    yr = ref.cac_train_fwd_ref(x.reshape(24, 32), w, beta).reshape(4, 6, 16)
+    np.testing.assert_allclose(y, yr, atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_bnn_kernel_matches_ref(m, k, n):
+    x, _, _, w, _, _ = _case(m, k, n, seed=m + 3)
+    np.testing.assert_allclose(ops.bnn_matmul(x, w), ref.bnn_matmul_ref(x, w), atol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_qnn_kernel_matches_ref(m, k, n):
+    ks = jax.random.split(jax.random.PRNGKey(m), 3)
+    xi = jax.random.randint(ks[0], (m, k), -128, 127, dtype=jnp.int8)
+    wi = jax.random.randint(ks[1], (k, n), -128, 127, dtype=jnp.int8)
+    ws = jax.random.uniform(ks[2], (1, n))
+    np.testing.assert_allclose(
+        ops.qnn_matmul(xi, wi, ws, 0.05), ref.qnn_matmul_ref(xi, wi, 0.05, ws),
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Tiled XLA paths (the dry-run lowers these) == fused reference
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(3, 60),
+    k=st.integers(3, 80),
+    n=st.integers(3, 40),
+    seed=st.integers(0, 2**30),
+)
+@settings(max_examples=25, deadline=None)
+def test_tiled_cvjp_equals_fused_property(m, k, n, seed):
+    old = bc.TILE_BUDGET
+    try:
+        bc.TILE_BUDGET = 1 << 10  # force tiling at tiny sizes
+        x, tau, s, w, beta, g = _case(m, k, n, seed=seed)
+        np.testing.assert_allclose(
+            bc.bika_matmul_cvjp(x, w, beta, tiled=True),
+            bc.bika_matmul(x, w, beta), atol=1e-4
+        )
+        np.testing.assert_allclose(
+            bc.bika_matmul_hw_tiled(x, tau, s),
+            bc.bika_matmul_hw(x, tau, s, clamp=False, acc_dtype=jnp.float32),
+            atol=1e-4,
+        )
+    finally:
+        bc.TILE_BUDGET = old
+
+
+def test_tiled_cvjp_grads_equal_fused():
+    old = bc.TILE_BUDGET
+    try:
+        bc.TILE_BUDGET = 1 << 10
+        x, _, _, w, beta, g = _case(48, 56, 24, seed=5)
+        dt = jax.vjp(lambda *a: bc.bika_matmul_cvjp(*a, tiled=True), x, w, beta)[1](g)
+        df = jax.vjp(bc.bika_matmul, x, w, beta)[1](g)
+        nb = np.asarray(_nonboundary_mask(x, w, beta))
+        masks = [nb.all(2), nb.all(0), nb.all(0)]
+        for a, b, msk in zip(dt, df, masks):
+            np.testing.assert_allclose(np.where(msk, a, 0), np.where(msk, b, 0),
+                                       atol=1e-4, rtol=1e-4)
+    finally:
+        bc.TILE_BUDGET = old
+
+
+def test_tiled_bounds_temp_memory():
+    """The whole point: grad of a grok-scale CAC layer compiles with
+    O(TILE_BUDGET) temp instead of O(M*K*N)."""
+    m, k, n = 2048, 6144, 2048  # MKN f32 = 103 GB if materialized
+    xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+    c = (
+        jax.jit(
+            lambda a, w, b: sum(
+                t.sum()
+                for t in jax.grad(
+                    lambda aa, pp, qq: bc.bika_matmul_cvjp(aa, pp, qq, tiled=True).sum(),
+                    argnums=(0, 1, 2),
+                )(a, w, b)
+            )
+        )
+        .lower(xs, ws, ws)
+        .compile()
+    )
+    temp = c.memory_analysis().temp_size_in_bytes
+    assert temp < 4e9, f"temp {temp/1e9:.1f} GB — tiling failed"

@@ -1,0 +1,210 @@
+"""Layer-library tests: backend switchability, decode==full equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.nn import LinearSpec, linear_apply, linear_init, linear_to_serve, unbox
+from repro.nn.attention import (
+    AttnConfig,
+    attn_apply,
+    attn_decode_step,
+    attn_init,
+    blockwise_attention,
+    dot_attention,
+    init_kv_cache,
+)
+from repro.nn.conv import conv2d_apply, conv2d_init, maxpool2d
+from repro.nn.linear import _unpack_signs, pack_signs
+from repro.nn.mlp import mlp_apply, mlp_init
+from repro.nn.moe import MoEConfig, moe_apply, moe_init
+from repro.nn.ssm import SSMConfig, init_ssm_state, ssm_apply, ssm_decode_step, ssm_init
+from repro.nn.xlstm_blocks import (
+    XLSTMConfig,
+    init_mlstm_state,
+    init_slstm_state,
+    mlstm_apply,
+    mlstm_decode_step,
+    mlstm_init,
+    slstm_apply,
+    slstm_decode_step,
+    slstm_init,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("mode", ["dense", "bika", "bnn", "qnn8"])
+def test_linear_modes_train_and_serve(mode):
+    spec = LinearSpec(mode=mode)
+    p = unbox(linear_init(KEY, 16, 8, spec, axes=("embed", "ffn")))
+    x = jax.random.normal(KEY, (4, 16))
+    y = linear_apply(p, x, spec)
+    assert y.shape == (4, 8)
+    assert np.isfinite(np.asarray(y)).all()
+    sp = linear_to_serve(p, spec)
+    ys = linear_apply(sp, x, spec, phase="serve")
+    assert ys.shape == (4, 8)
+    assert np.isfinite(np.asarray(ys)).all()
+
+
+def test_bika_serve_weight_bytes_shrink():
+    """The serving-form BiKA layer stores ~9 bits/edge vs 32 (fp32 train) —
+    the paper's resource claim carried into the framework."""
+    from repro.nn.module import param_bytes
+
+    spec = LinearSpec(mode="bika", pack_signs=True)
+    train_p = unbox(linear_init(KEY, 256, 128, spec, axes=(None, None)))
+    serve_p = linear_to_serve(train_p, spec)
+    tb = param_bytes(train_p)
+    sb = param_bytes(serve_p)
+    assert sb < tb / 6  # int8 tau + packed 1-bit signs vs two fp32 tensors
+
+
+def test_pack_unpack_roundtrip():
+    s = jnp.where(jax.random.normal(KEY, (2, 16, 8)) > 0, 1, -1).astype(jnp.int8)
+    up = _unpack_signs(pack_signs(s), 16)
+    np.testing.assert_array_equal(np.asarray(up), np.asarray(s))
+
+
+def test_blockwise_equals_unblocked():
+    q = jax.random.normal(KEY, (2, 16, 4, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 16, 2, 8))
+    pos = jnp.arange(16)
+    ref = dot_attention(q, k, v, q_positions=pos, kv_positions=pos, causal=True)
+    blk = blockwise_attention(q, k, v, causal=True, block_q=4)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(blk), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [None, 4])
+def test_decode_matches_full_attention(window):
+    """Token-by-token decode through the KV cache (ring cache for SWA)
+    reproduces full-sequence attention outputs."""
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8, window=window, block_q=4)
+    spec = LinearSpec(mode="dense")
+    p = unbox(attn_init(KEY, cfg, spec))
+    s = 8
+    x = jax.random.normal(KEY, (2, s, 32))
+    full = attn_apply(p, x, cfg, spec)
+    cache = init_kv_cache(2, cfg, max_len=s, dtype=jnp.float32)
+    if window is not None:
+        assert cache["k"].shape[1] == window  # ring buffer, not full length
+    outs = []
+    for t in range(s):
+        yt, cache = attn_decode_step(p, x[:, t : t + 1], cache, jnp.asarray(t), cfg, spec, phase="train")
+        outs.append(yt)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(dec), atol=2e-5)
+
+
+def test_int8_kv_cache_close_to_fp():
+    cfg = AttnConfig(d_model=32, n_heads=4, n_kv_heads=2, head_dim=8)
+    spec = LinearSpec(mode="dense")
+    p = unbox(attn_init(KEY, cfg, spec))
+    s = 8
+    x = jax.random.normal(KEY, (2, s, 32))
+    caches = {
+        "fp": init_kv_cache(2, cfg, max_len=s, dtype=jnp.float32),
+        "q8": init_kv_cache(2, cfg, max_len=s, quantized=True),
+    }
+    outs = {}
+    for name in caches:
+        c = caches[name]
+        ys = []
+        for t in range(s):
+            yt, c = attn_decode_step(p, x[:, t : t + 1], c, jnp.asarray(t), cfg, spec, phase="train")
+            ys.append(yt)
+        outs[name] = jnp.concatenate(ys, axis=1)
+    err = float(jnp.max(jnp.abs(outs["fp"] - outs["q8"])))
+    scale = float(jnp.max(jnp.abs(outs["fp"])))
+    assert err < 0.05 * scale, (err, scale)
+
+
+def test_moe_routes_topk_and_balances():
+    cfg = MoEConfig(n_experts=4, top_k=2, capacity_factor=2.0)
+    spec = LinearSpec(mode="dense")
+    p = unbox(moe_init(KEY, 32, 64, cfg, spec))
+    x = jax.random.normal(KEY, (2, 16, 32))
+    y, aux = moe_apply(p, x, cfg, spec)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert 0.0 < float(aux) < 4.0  # balanced routing -> aux ~ 1
+
+
+@pytest.mark.parametrize("mode", ["dense", "bika"])
+def test_moe_backend_switch(mode):
+    cfg = MoEConfig(n_experts=2, top_k=1, capacity_factor=2.0)
+    spec = LinearSpec(mode=mode)
+    p = unbox(moe_init(KEY, 16, 32, cfg, spec))
+    x = jax.random.normal(KEY, (1, 8, 16))
+    y, _ = moe_apply(p, x, cfg, spec)
+    assert y.shape == x.shape and np.isfinite(np.asarray(y)).all()
+
+
+def test_ssm_scan_equals_stepwise_decode():
+    cfg = SSMConfig(d_model=32, d_state=8, expand=2, head_dim=16)
+    spec = LinearSpec(mode="dense")
+    p = unbox(ssm_init(KEY, cfg, spec))
+    x = jax.random.normal(KEY, (2, 6, 32))
+    yfull = ssm_apply(p, x, cfg, spec)
+    st = init_ssm_state(2, cfg)
+    outs = []
+    for t in range(6):
+        yt, st = ssm_decode_step(p, x[:, t : t + 1], st, cfg, spec, phase="train")
+        outs.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(yfull), np.asarray(jnp.concatenate(outs, axis=1)), atol=2e-5
+    )
+
+
+def test_mlstm_scan_equals_stepwise_decode():
+    cfg = XLSTMConfig(d_model=32, n_heads=4)
+    spec = LinearSpec(mode="dense")
+    p = unbox(mlstm_init(KEY, cfg, spec))
+    x = jax.random.normal(KEY, (2, 5, 32))
+    yfull = mlstm_apply(p, x, cfg, spec)
+    st = init_mlstm_state(2, cfg)
+    outs = []
+    for t in range(5):
+        yt, st = mlstm_decode_step(p, x[:, t : t + 1], st, cfg, spec, phase="train")
+        outs.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(yfull), np.asarray(jnp.concatenate(outs, axis=1)), atol=2e-5
+    )
+
+
+def test_slstm_scan_equals_stepwise_decode():
+    cfg = XLSTMConfig(d_model=32, n_heads=4)
+    spec = LinearSpec(mode="dense")
+    p = unbox(slstm_init(KEY, cfg, spec))
+    x = jax.random.normal(KEY, (2, 5, 32))
+    yfull = slstm_apply(p, x, cfg, spec)
+    st = init_slstm_state(2, cfg)
+    outs = []
+    for t in range(5):
+        yt, st = slstm_decode_step(p, x[:, t : t + 1], st, cfg, spec, phase="train")
+        outs.append(yt)
+    np.testing.assert_allclose(
+        np.asarray(yfull), np.asarray(jnp.concatenate(outs, axis=1)), atol=2e-5
+    )
+
+
+@pytest.mark.parametrize("mode", ["dense", "bika", "bnn", "qnn8"])
+def test_conv_backend_switch(mode):
+    spec = LinearSpec(mode=mode)
+    p = unbox(conv2d_init(KEY, 3, 8, spec))
+    img = jax.random.normal(KEY, (2, 8, 8, 3))
+    y = conv2d_apply(p, img, spec)
+    assert y.shape == (2, 8, 8, 8)
+    assert np.isfinite(np.asarray(y)).all()
+    assert maxpool2d(y).shape == (2, 4, 4, 8)
+
+
+def test_mlp_activations():
+    spec = LinearSpec(mode="dense")
+    x = jax.random.normal(KEY, (2, 4, 16))
+    for act, gated in [("silu", True), ("relu2", False), ("gelu", False)]:
+        p = unbox(mlp_init(KEY, 16, 32, spec, gated=gated))
+        y = mlp_apply(p, x, spec, activation=act)
+        assert y.shape == x.shape

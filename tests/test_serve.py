@@ -1,0 +1,106 @@
+"""Serving engine tests: prefill+decode == full-sequence forward (greedy),
+request scheduler, hardware-form (serve-phase) BiKA params."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.nn.module import unbox
+from repro.serve.engine import Request, ServeEngine, serve_batch
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _greedy_via_full_forward(api, params, prompts, n_new, batch_extra=None):
+    """Oracle: grow the sequence and re-run the full forward each step."""
+    toks = prompts
+    outs = []
+    for _ in range(n_new):
+        batch = {"tokens": toks}
+        if batch_extra:
+            batch.update(batch_extra)
+        logits = api.apply(params, batch)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        outs.append(nxt)
+        toks = jnp.concatenate([toks, nxt], axis=1)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("name", ["smollm-360m", "mixtral-8x22b", "zamba2-2.7b",
+                                  "xlstm-125m"])
+def test_incremental_decode_matches_full_forward(name):
+    cfg = get_smoke(name, compute_mode="dense", remat=False)
+    if cfg.n_experts:
+        # MoE capacity dropping depends on the token count, which differs
+        # between one-shot forward and incremental decode; disable dropping
+        # so the equivalence is exact.
+        cfg = cfg.replace(capacity_factor=8.0)
+    api = build_model(cfg, phase="train")
+    params = unbox(api.init(KEY))
+    prompts = jax.random.randint(KEY, (2, 7), 0, cfg.vocab)
+    n_new = 5
+    got = serve_batch(api, params, prompts, max_new_tokens=n_new, max_len=16)
+    want = _greedy_via_full_forward(api, params, prompts, n_new)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_encdec_decode_matches_full_forward():
+    cfg = get_smoke("seamless-m4t-large-v2", compute_mode="dense", remat=False)
+    api = build_model(cfg, phase="train")
+    params = unbox(api.init(KEY))
+    frames = 0.1 * jax.random.normal(KEY, (2, 8, cfg.d_model))
+    prompts = jax.random.randint(KEY, (2, 5), 0, cfg.vocab)
+    logits_p, cache = api.prefill(params, {"tokens": prompts, "frames": frames},
+                                  max_len=12)
+    tok = jnp.argmax(logits_p[:, -1], -1).astype(jnp.int32)[:, None]
+    got = [tok]
+    for t in range(1, 4):
+        logits, cache = api.decode_step(params, tok, cache,
+                                        jnp.asarray(5 + t - 1, jnp.int32))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        got.append(tok)
+    got = jnp.concatenate(got, axis=1)
+    want = _greedy_via_full_forward(api, params, prompts, 4, {"frames": frames})
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_engine_queue_and_eos():
+    cfg = get_smoke("smollm-360m", compute_mode="dense", remat=False)
+    api = build_model(cfg, phase="train")
+    params = unbox(api.init(KEY))
+    eng = ServeEngine(api, params, cfg, batch_size=2, max_len=32)
+    rng = np.random.RandomState(0)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=rng.randint(0, cfg.vocab, size=4).astype(np.int32),
+                           max_new_tokens=6))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(r.output is not None and 1 <= len(r.output) <= 6 for r in done)
+
+
+def test_bika_serve_phase_runs():
+    """Hardware-form (int8 tau + packed signs) params serve end-to-end."""
+    from repro.nn.linear import linear_to_serve
+    cfg = get_smoke("smollm-360m", compute_mode="bika", remat=False)
+    # train params -> serve params via per-leaf conversion happens at the
+    # linear level; here we build the serve-phase model and init directly.
+    api_s = build_model(cfg.replace(pack_signs=True), phase="serve")
+    params = unbox(api_s.init(KEY))
+    prompts = jax.random.randint(KEY, (2, 6), 0, cfg.vocab)
+    logits, cache = api_s.prefill(params, {"tokens": prompts}, max_len=10)
+    assert np.isfinite(np.asarray(logits)).all()
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits2, _ = api_s.decode_step(params, tok, cache, jnp.asarray(6, jnp.int32))
+    assert np.isfinite(np.asarray(logits2)).all()
+
+
+def test_quantized_kv_cache_close():
+    cfg = get_smoke("smollm-360m", compute_mode="dense", remat=False)
+    api = build_model(cfg, phase="train")
+    params = unbox(api.init(KEY))
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab)
+    lf, cf = api.prefill(params, {"tokens": prompts}, max_len=12)
+    lq, cq = api.prefill(params, {"tokens": prompts}, max_len=12, quantized=True)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lq), atol=0.15, rtol=0.1)

@@ -1,0 +1,99 @@
+"""Property tests for the paper's §II-A math: Eq. 1-7 conversion is EXACT for
+piecewise-constant functions, and the m-threshold quantization converges."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import thresholds as thr
+
+jax.config.update("jax_enable_x64", False)
+
+
+@st.composite
+def pwc_functions(draw):
+    t = draw(st.integers(min_value=1, max_value=24))
+    outputs = draw(
+        st.lists(
+            st.floats(min_value=-50, max_value=50, allow_nan=False, width=32),
+            min_size=t,
+            max_size=t,
+        )
+    )
+    lo = draw(st.floats(min_value=-10, max_value=9, allow_nan=False, width=32))
+    width = draw(st.floats(min_value=0.5, max_value=10, allow_nan=False, width=32))
+    return np.array(outputs, np.float32), float(lo), float(lo + width)
+
+
+@given(pwc_functions())
+@settings(max_examples=200, deadline=None)
+def test_eq7_exact_reconstruction(case):
+    """f'(x) = sum alpha_i Thres_i(x) reproduces the PWC function EXACTLY
+    (up to float addition error) on every slot — the heart of §II-A."""
+    outputs, lo, hi = case
+    t = len(outputs)
+    edges = np.linspace(lo, hi, t + 1, dtype=np.float64)
+    boundaries = jnp.asarray(edges[:-1], jnp.float32)
+    alphas = thr.pwc_to_alphas(jnp.asarray(outputs))
+    # probe strictly inside each slot (threshold compare at boundaries is
+    # float-sensitive; interior points are the well-defined regime)
+    probes = jnp.asarray((edges[:-1] + edges[1:]) / 2.0, jnp.float32)
+    got = thr.threshold_sum(probes, boundaries, alphas)
+    scale = max(1.0, float(np.abs(outputs).sum()))
+    np.testing.assert_allclose(np.asarray(got), outputs, atol=1e-4 * scale, rtol=1e-5)
+
+
+@given(pwc_functions())
+@settings(max_examples=100, deadline=None)
+def test_alphas_roundtrip(case):
+    outputs, _, _ = case
+    alphas = thr.pwc_to_alphas(jnp.asarray(outputs))
+    back = thr.alphas_to_pwc(alphas)
+    scale = max(1.0, float(np.abs(outputs).sum()))
+    np.testing.assert_allclose(np.asarray(back), outputs, atol=1e-4 * scale, rtol=1e-5)
+
+
+def test_eval_pwc_matches_threshold_sum_on_random_points():
+    rng = np.random.default_rng(0)
+    outputs = jnp.asarray(rng.normal(size=12).astype(np.float32))
+    edges = np.linspace(-2.0, 2.0, 13)
+    boundaries = jnp.asarray(edges[:-1], jnp.float32)
+    alphas = thr.pwc_to_alphas(outputs)
+    x = jnp.asarray(rng.uniform(-1.99, 1.99, size=256).astype(np.float32))
+    direct = thr.eval_pwc(x, boundaries, outputs)
+    viathr = thr.threshold_sum(x, boundaries, alphas)
+    # agreement except possibly at exact boundaries (measure zero)
+    np.testing.assert_allclose(np.asarray(viathr), np.asarray(direct), atol=1e-4)
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8, 16, 64])
+def test_m_budget_exact(m):
+    """quantize_alphas hits the integer budget sum|alpha_int| == m exactly."""
+    rng = np.random.default_rng(m)
+    alphas = jnp.asarray(rng.normal(size=10).astype(np.float32))
+    q = thr.quantize_alphas(alphas, m)
+    assert int(jnp.abs(q).sum()) == m
+    assert np.allclose(np.asarray(q), np.round(np.asarray(q)))  # integers
+
+
+def test_approximation_error_decreases_with_m():
+    """Fig. 5-6: higher m approximates the nonlinear function better."""
+    fn = lambda x: jnp.tanh(3 * x) + 0.3 * jnp.sin(5 * x)
+    errs = []
+    for m in [1, 4, 16, 64]:
+        tau, s, scale = thr.approximate_function(fn, -1.0, 1.0, t=64, m=m)
+        x = jnp.linspace(-0.999, 0.999, 1024)
+        approx = scale * thr.threshold_sum(x, tau, s)
+        errs.append(float(jnp.sqrt(jnp.mean((fn(x) - approx) ** 2))))
+    assert errs[-1] < errs[0] * 0.25, errs
+    assert all(e2 <= e1 * 1.05 for e1, e2 in zip(errs, errs[1:])), errs
+
+
+def test_expand_unit_thresholds_counts():
+    taus, signs = thr.expand_unit_thresholds(
+        jnp.asarray([0.0, 1.0, 2.0]), jnp.asarray([2.0, -1.0, 0.0])
+    )
+    assert taus.shape == (3,)
+    np.testing.assert_array_equal(np.asarray(signs), [1.0, 1.0, -1.0])
+    np.testing.assert_array_equal(np.asarray(taus), [0.0, 0.0, 1.0])
