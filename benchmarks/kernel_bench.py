@@ -1,17 +1,41 @@
 """CAC-vs-baseline contraction wall time, CPU-relative (this container has no
-TPU; numbers are meaningful as *ratios* between XLA paths on the same host).
-Pallas interpret-mode timing is excluded from conclusions (it is a Python
-emulator) but one small shape is reported for completeness.
+TPU; numbers are meaningful as *ratios* between paths on the same host).
+
+New-vs-old schedule A/B rows (DESIGN.md §2):
+  * fused one-pass STE backward  vs the legacy two-call backward
+  * m-folded single contraction  vs the per-m Python-loop sum
+  * autotuned (heuristic) blocks vs the old fixed 256/256/512 blocks
+
+Pallas interpret-mode timing is excluded from *roofline* conclusions (it is
+a Python emulator) but the fused-vs-two-call ratio is still meaningful
+there: both sides pay the same per-call emulator overhead, so fewer kernel
+launches + one mask recompute shows up directly.
+
+Results are also written to BENCH_kernels.json at the repo root so future
+PRs have a perf trajectory to regress against.
 """
 from __future__ import annotations
 
-from typing import List
+import json
+import os
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import bika as bika_core
+from repro.kernels import autotune, ops
 from .common import timed
+
+# benchmarks/ ships inside the repo root, so dirname(dirname(__file__)) == root
+_JSON_PATH = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_kernels.json")
+
+
+def _record(results: Dict[str, Dict], name: str, us: float, note: str,
+            rows: List[str]) -> None:
+    results[name] = {"us": round(us, 1), "note": note}
+    rows.append(f"kernel/{name},{us:.1f},{note}")
 
 
 def main(quick: bool = True) -> List[str]:
@@ -22,6 +46,9 @@ def main(quick: bool = True) -> List[str]:
     w = jax.random.normal(kw, (k, n)) * 0.05
     beta = jax.random.normal(kb, (k, n)) * 0.05
     tau, s = bika_core.to_hardware(w, beta)
+
+    rows: List[str] = []
+    results: Dict[str, Dict] = {}
 
     dense = jax.jit(lambda a, b: a @ b)
     bika_fused = jax.jit(bika_core.bika_matmul)
@@ -39,23 +66,112 @@ def main(quick: bool = True) -> List[str]:
     t_gc = timed(bika_cvjp_g, x, w, beta)
     t_gf = timed(bika_fused_g, x, w, beta)
 
-    rows = [
-        f"kernel/dense_matmul,{t_dense:.1f},1.00x baseline ({m}x{k}x{n})",
-        f"kernel/bika_fused_fwd,{t_fused:.1f},{t_fused / t_dense:.2f}x dense",
-        f"kernel/bika_hw_fwd,{t_hw:.1f},{t_hw / t_dense:.2f}x dense",
-        f"kernel/bika_grad_cvjp,{t_gc:.1f},{t_gc / t_gf:.2f}x of fused-grad "
-        f"(bounded-memory backward)",
-    ]
-    if quick:
-        from repro.kernels import ops
+    _record(results, "dense_matmul", t_dense, f"1.00x baseline ({m}x{k}x{n})", rows)
+    _record(results, "bika_fused_fwd", t_fused, f"{t_fused / t_dense:.2f}x dense", rows)
+    _record(results, "bika_hw_fwd", t_hw, f"{t_hw / t_dense:.2f}x dense", rows)
+    _record(results, "bika_grad_cvjp", t_gc,
+            f"{t_gc / t_gf:.2f}x of fused-grad (bounded-memory backward)", rows)
 
+    # -- m-axis folding (XLA route): one contraction vs per-m Python sum.
+    # The fold chunks the scan at the per-m term size (what linear_apply
+    # does), so locality matches the old loop while issuing ONE op.
+    mth = 4
+    km = k // mth
+    wm = jax.random.normal(kw, (mth, km, n)) * 0.05
+    bm_ = jax.random.normal(kb, (mth, km, n)) * 0.05
+    xm = x[:, :km]
+    loop_fn = jax.jit(lambda xx, ww, bb: sum(
+        bika_core.bika_matmul(xx, ww[j], bb[j]) for j in range(mth)))
+    wf, bf = bika_core.fold_m_axis(wm, bm_)
+    fold_fn = jax.jit(lambda xx, ww, bb: bika_core.bika_matmul(
+        bika_core.tile_m_axis(xx, mth), ww, bb, chunk=km))
+    t_loop = timed(loop_fn, xm, wm, bm_, iters=9)
+    t_fold = timed(fold_fn, xm, wf, bf, iters=9)
+    _record(results, f"m{mth}_xla_per_m_loop", t_loop,
+            f"1.00x baseline (m={mth}, {m}x{km}x{n} per term)", rows)
+    _record(results, f"m{mth}_xla_folded", t_fold,
+            f"{t_fold / t_loop:.2f}x of per-m loop (chunked at K={km}; "
+            "informational — XLA-CPU noise-bound; the kernel-route rows "
+            "below carry the folding claim)", rows)
+
+    if quick:
+        # -- Pallas interpret-mode A/Bs (small shape; emulator-relative) --
         mi, ki, ni = 64, 128, 64
         xi, ti, si = x[:mi, :ki], tau[:ki, :ni], s[:ki, :ni]
+        wi, bi = w[:ki, :ni], beta[:ki, :ni]
+        gi = jnp.ones((mi, ni), jnp.float32)
         t_pal = timed(lambda: ops.cac_matmul(xi, ti, si), iters=2, warmup=1)
-        rows.append(
-            f"kernel/pallas_interpret_{mi}x{ki}x{ni},{t_pal:.1f},"
-            f"interpret-mode (emulator; excluded from conclusions)"
-        )
+        _record(results, f"pallas_interpret_{mi}x{ki}x{ni}", t_pal,
+                "interpret-mode (emulator; excluded from conclusions)", rows)
+
+        vjp = lambda fused: jax.vjp(
+            lambda *a: ops.cac_train_matmul(*a, fused_bwd=fused), xi, wi, bi
+        )[1](gi)
+        t_bwd2 = timed(lambda: vjp(False), iters=2, warmup=1)
+        t_bwd1 = timed(lambda: vjp(True), iters=2, warmup=1)
+        _record(results, "pallas_bwd_two_call", t_bwd2,
+                "1.00x baseline (legacy dx-call + dw-call)", rows)
+        _record(results, "pallas_bwd_fused_one_pass", t_bwd1,
+                f"{t_bwd1 / t_bwd2:.2f}x of two-call (one mask recompute)", rows)
+
+        # -- m-folding on the kernel route: m launches vs ONE folded launch --
+        mthp = 4
+        wmp = w[:ki, :ni].reshape(1, ki, ni).repeat(mthp, 0) * 0.9
+        bmp = beta[:ki, :ni].reshape(1, ki, ni).repeat(mthp, 0) * 1.1
+        wpf, bpf = bika_core.fold_m_axis(wmp, bmp)
+        xpf = bika_core.tile_m_axis(xi, mthp)
+        t_mloop = timed(lambda: sum(
+            ops.cac_train_matmul(xi, wmp[j], bmp[j]) for j in range(mthp)),
+            iters=2, warmup=1)
+        t_mfold = timed(lambda: ops.cac_train_matmul(xpf, wpf, bpf),
+                        iters=2, warmup=1)
+        _record(results, f"pallas_m{mthp}_per_m_launches", t_mloop,
+                f"1.00x baseline ({mthp} kernel launches)", rows)
+        _record(results, f"pallas_m{mthp}_folded_one_launch", t_mfold,
+                f"{t_mfold / t_mloop:.2f}x of per-m launches", rows)
+
+        # -- autotuned blocks vs the old fixed 256/256/512 default, at a
+        # decode-like long-K shape where the heuristic actually diverges
+        # from the fixed config after clamping (fixed keeps bk=512, the
+        # heuristic deepens to bk=1024: half the k-grid steps) --
+        mb, kb2, nb = 32, 4096, 128
+        xb = jax.random.normal(kx, (mb, kb2))
+        tb = jax.random.normal(kw, (kb2, nb))
+        sb = jnp.sign(jax.random.normal(kb, (kb2, nb)))
+        bl = autotune.get_blocks(mb, kb2, nb, "hw_fwd", use_cache=False)
+        fixed = autotune.get_blocks(mb, kb2, nb, "hw_fwd", use_cache=False,
+                                    overrides=dict(block_m=256, block_n=256,
+                                                   block_k=512))
+        t_def = timed(lambda: ops.cac_matmul(xb, tb, sb, **fixed),
+                      iters=2, warmup=1)
+        t_tuned = timed(lambda: ops.cac_matmul(xb, tb, sb, **bl),
+                        iters=2, warmup=1)
+        distinct = bl != fixed
+        _record(results, "pallas_blocks_fixed", t_def,
+                f"1.00x baseline ({fixed['block_m']}/{fixed['block_n']}/"
+                f"{fixed['block_k']} at {mb}x{kb2}x{nb})", rows)
+        _record(results, "pallas_blocks_tuned", t_tuned,
+                f"{t_tuned / t_def:.2f}x of fixed "
+                f"({bl['block_m']}/{bl['block_n']}/{bl['block_k']})"
+                + ("" if distinct else "; WARNING identical configs — vacuous"),
+                rows)
+
+    payload = {
+        "meta": {
+            "backend": jax.default_backend(),
+            "quick": quick,
+            "shape": [m, k, n],
+            "units": "us_per_call_median",
+        },
+        "results": results,
+    }
+    try:
+        with open(_JSON_PATH, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        rows.append(f"bench_json,0.0,wrote {os.path.basename(_JSON_PATH)}")
+    except OSError as e:
+        rows.append(f"bench_json,0.0,SKIPPED ({e})")
     return rows
 
 

@@ -41,6 +41,8 @@ __all__ = [
     "bika_matmul_hw_tiled",
     "bika_linear_init",
     "bika_linear_apply",
+    "fold_m_axis",
+    "tile_m_axis",
     "bika_conv2d_init",
     "bika_conv2d_apply",
     "to_hardware",
@@ -60,12 +62,18 @@ class BikaConfig:
     out_scale: 'none'   -> raw integer-valued sum (paper networks),
                'rsqrt_k' -> y / sqrt(m*K) (LM integration; keeps activations O(1)).
     hw_exact: emulate the saturating int8 accumulator in the forward pass.
+    fold_m:  fold the m-thresholds axis into K ((m,K,N) -> (m*K,N)) so the
+             layer issues ONE contraction instead of an m-term Python sum
+             (DESIGN.md §2). Bit-identical outputs (±1 integer sums commute
+             exactly); ignored by the hw_exact path, whose per-m saturating
+             accumulators are order-sensitive by design.
     """
 
     m: int = 1
     chunk: Optional[int] = None
     out_scale: str = "none"
     hw_exact: bool = False
+    fold_m: bool = True
 
 
 def _edge_sum(x: jax.Array, w: jax.Array, beta: jax.Array) -> jax.Array:
@@ -383,6 +391,22 @@ def bika_matmul_hw(
 # ---------------------------------------------------------------------------
 
 
+def fold_m_axis(w: jax.Array, beta: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """(m, K, N) edge params -> (m*K, N): the m-thresholds-per-edge sum
+    sum_j sum_k Sign(x_k w[j,k,n] + beta[j,k,n]) is a single contraction over
+    a K'=m*K axis once x is tiled m times (``tile_m_axis``)."""
+    m, k, n = w.shape
+    return w.reshape(m * k, n), beta.reshape(m * k, n)
+
+
+def tile_m_axis(x: jax.Array, m: int) -> jax.Array:
+    """Repeat the trailing K axis m times: (..., K) -> (..., m*K), matching
+    the row order of ``fold_m_axis`` (block j holds threshold set j)."""
+    if m == 1:
+        return x
+    return jnp.tile(x, (1,) * (x.ndim - 1) + (m,))
+
+
 def bika_linear_init(key: jax.Array, k: int, n: int, m: int = 1, dtype=jnp.float32):
     """PyTorch-Linear-style uniform init for (w, beta), each (m, K, N)."""
     bound = 1.0 / jnp.sqrt(jnp.asarray(k, jnp.float32))
@@ -404,9 +428,17 @@ def bika_linear_apply(params, x: jax.Array, cfg: BikaConfig = BikaConfig()) -> j
     w, beta = params["w"], params["beta"]
     m, k, _ = w.shape
     if cfg.hw_exact:
+        # per-m saturating accumulators (order-sensitive): never folded
         tau, s = to_hardware(w, beta)
         ys = [bika_matmul_hw(x, tau[j], s[j], hw_exact=True) for j in range(m)]
         y = sum(ys).astype(x.dtype)
+    elif cfg.fold_m and m > 1:
+        wf, bf = fold_m_axis(w, beta)
+        # chunk defaults to K so the folded scan's live intermediate stays at
+        # the per-m term size — same locality/memory as the old m-term loop,
+        # one contraction op (and exact: chunk invariance is integer-exact)
+        chunk = cfg.chunk if cfg.chunk is not None else k
+        y = bika_matmul(tile_m_axis(x, m), wf, bf, chunk=chunk)
     else:
         y = sum(bika_matmul(x, w[j], beta[j], chunk=cfg.chunk) for j in range(m))
     return _apply_out_scale(y, m, k, cfg.out_scale)

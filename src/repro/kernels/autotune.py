@@ -1,0 +1,266 @@
+"""Shape-adaptive block selection for the Pallas kernel wrappers (DESIGN.md §2).
+
+Two layers, both deterministic by default:
+
+  1. ``heuristic_blocks(m, k, n, path)`` — a small closed-form table keyed on
+     the contraction *path* (hw_fwd / train_fwd / train_bwd / bnn / qnn) and
+     adapted to the problem shape: skinny-M (decode-like) problems widen the
+     N block to keep the VPU lanes full, long-K problems lengthen the K block
+     to amortize output-block traffic, and backward paths shrink block_k
+     because three live output accumulators raise VMEM pressure.
+  2. ``measured_blocks(...)`` — an optional measured search that times the
+     real kernel call over a candidate list and persists the winner in an
+     on-disk JSON cache (env ``REPRO_AUTOTUNE_CACHE`` or
+     ``~/.cache/repro/autotune.json``), keyed on ``backend:path:MxKxN``.
+
+``get_blocks`` merges heuristic < cached < explicit caller overrides and then
+clamps to legal tile sizes for the (padded) problem, so every kernel wrapper
+funnels through one resolution point.  ``pick_block_k_sub`` chooses the
+sub-tile depth of the vectorized beat loop (kernels/cac_matmul.py): the
+largest divisor of block_k whose (bm, bk_sub, bn) broadcast-compare stays
+inside the VREG working-set budget.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Dict, Optional
+
+import jax
+
+__all__ = [
+    "DEFAULT_BLOCKS",
+    "heuristic_blocks",
+    "get_blocks",
+    "measured_blocks",
+    "pick_block_k_sub",
+    "cache_path",
+    "clear_cache",
+]
+
+DEFAULT_BLOCKS = dict(block_m=256, block_n=256, block_k=512)
+
+# f32 elements of one (bm, bk_sub, bn) sub-tile broadcast; 2^19 el = 2 MiB,
+# a conservative VREG-spill working set (the VPU streams it in (8,128) regs).
+SUBTILE_BUDGET = 1 << 19
+
+# Per-path base blocks. Paths:
+#   hw_fwd    — serving comparator contraction (x, tau, s)
+#   train_fwd — Sign(x*w + beta) forward
+#   train_bwd — STE backward (fused or two-call; 3 output accumulators)
+#   bnn / qnn — MXU baselines (standard tiled matmul)
+_BASE: Dict[str, Dict[str, int]] = {
+    "hw_fwd": dict(block_m=256, block_n=256, block_k=512),
+    "train_fwd": dict(block_m=256, block_n=256, block_k=512),
+    "train_bwd": dict(block_m=256, block_n=256, block_k=256),
+    "bnn": dict(block_m=256, block_n=256, block_k=512),
+    "qnn": dict(block_m=256, block_n=256, block_k=512),
+}
+
+_SUBLANE, _LANE = 8, 128  # f32 min tile (sublane x lane)
+
+
+def _round_up(v: int, b: int) -> int:
+    return -(-v // b) * b
+
+
+def heuristic_blocks(m: int, k: int, n: int, path: str = "train_fwd") -> Dict[str, int]:
+    """Deterministic shape-adaptive block table. Returns unclamped targets;
+    ``get_blocks`` applies the legality clamp."""
+    base = dict(_BASE.get(path, DEFAULT_BLOCKS))
+    bm, bn, bk = base["block_m"], base["block_n"], base["block_k"]
+    if m <= 64:
+        # decode-like: few rows, so spend the VMEM on wider N instead
+        bm, bn = 64, min(2 * bn, 512)
+    if k >= 4096 and path not in ("train_bwd",):
+        # long contractions: longer K blocks cut output-block init/flush count
+        bk = 1024
+    if n <= 128:
+        # narrow outputs: reclaim the N budget into K depth
+        bk = max(bk, 1024) if path != "train_bwd" else bk
+    return dict(block_m=bm, block_n=bn, block_k=bk)
+
+
+def _clamp(m: int, k: int, n: int, bl: Dict[str, int]) -> Dict[str, int]:
+    out = dict(bl)
+    out["block_m"] = max(min(bl["block_m"], _round_up(m, _SUBLANE)), 1)
+    out["block_n"] = max(min(bl["block_n"], _round_up(n, _LANE)), 1)
+    out["block_k"] = max(min(bl["block_k"], k), 1)
+    return out
+
+
+def pick_block_k_sub(bm: int, bn: int, bk: int, requested: Optional[int] = None,
+                     budget: int = SUBTILE_BUDGET) -> int:
+    """Largest divisor of bk such that bm * bk_sub * bn <= budget (>= 1)."""
+    cap = requested if requested else max(budget // max(bm * bn, 1), 1)
+    bks = max(min(cap, bk), 1)
+    while bk % bks:
+        bks -= 1
+    return bks
+
+
+# ---------------------------------------------------------------------------
+# Measured-search mode with on-disk cache
+# ---------------------------------------------------------------------------
+
+_cache_lock = threading.Lock()
+_cache: Optional[Dict[str, Dict[str, int]]] = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_AUTOTUNE_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro", "autotune.json"),
+    )
+
+
+def _cache_key(path: str, m: int, k: int, n: int) -> str:
+    return f"{jax.default_backend()}:{path}:{m}x{k}x{n}"
+
+
+def _load_cache() -> Dict[str, Dict[str, int]]:
+    global _cache
+    with _cache_lock:
+        if _cache is None:
+            try:
+                with open(cache_path()) as fh:
+                    _cache = {k_: dict(v) for k_, v in json.load(fh).items()}
+            except (OSError, ValueError):
+                _cache = {}
+        return _cache
+
+
+def _store_cache(key: str, blocks: Dict[str, int]) -> None:
+    global _cache
+    _load_cache()  # merge into whatever is already on disk
+    with _cache_lock:
+        cur = dict(_cache or {})
+        cur[key] = {k_: int(v) for k_, v in blocks.items()}
+        _cache = cur
+        f = cache_path()
+        try:
+            os.makedirs(os.path.dirname(f), exist_ok=True)
+            tmp = f + ".tmp"
+            with open(tmp, "w") as fh:
+                json.dump(cur, fh, indent=1, sort_keys=True)
+            os.replace(tmp, f)
+        except OSError:
+            pass  # cache is best-effort; heuristics still apply
+
+
+def clear_cache() -> None:
+    """Drop the in-memory cache (tests; does not delete the file)."""
+    global _cache
+    with _cache_lock:
+        _cache = None
+
+
+def get_blocks(
+    m: int,
+    k: int,
+    n: int,
+    path: str = "train_fwd",
+    overrides: Optional[Dict[str, int]] = None,
+    use_cache: bool = True,
+) -> Dict[str, int]:
+    """Resolve (block_m, block_n, block_k[, block_k_sub]) for one call site.
+
+    Priority: explicit overrides > measured cache > heuristic table; the
+    result is clamped to legal tile sizes for the padded problem."""
+    bl = heuristic_blocks(m, k, n, path)
+    if use_cache:
+        hit = _load_cache().get(_cache_key(path, m, k, n))
+        if hit:
+            bl.update(hit)
+    sub = None
+    if overrides:
+        ov = {kk: int(v) for kk, v in overrides.items() if v is not None}
+        sub = ov.pop("block_k_sub", None)
+        unknown = set(ov) - {"block_m", "block_n", "block_k"}
+        if unknown:
+            raise TypeError(f"unknown block override(s): {sorted(unknown)}")
+        bl.update(ov)
+    out = _clamp(m, k, n, bl)
+    if sub is not None:
+        out["block_k_sub"] = sub
+    return out
+
+
+_CANDIDATES = [
+    dict(block_m=128, block_n=128, block_k=256),
+    dict(block_m=128, block_n=256, block_k=512),
+    dict(block_m=256, block_n=256, block_k=256),
+    dict(block_m=256, block_n=256, block_k=512),
+    dict(block_m=256, block_n=512, block_k=512),
+    dict(block_m=512, block_n=256, block_k=1024),
+]
+
+
+def measured_blocks(
+    path: str,
+    m: int,
+    k: int,
+    n: int,
+    *,
+    candidates=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+    seed: int = 0,
+) -> Dict[str, int]:
+    """Time the real kernel over a candidate list; persist + return the best.
+
+    The measured winner goes into the on-disk cache (``cache_path()``; set
+    ``REPRO_AUTOTUNE_CACHE`` to redirect it) so later ``get_blocks`` calls
+    for the same (backend, path, shape) pick it up without re-timing."""
+    import time
+
+    import jax.numpy as jnp
+
+    from . import ops  # deferred: ops imports this module
+
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (m, k), jnp.float32)
+    w = jax.random.normal(ks[1], (k, n), jnp.float32) * 0.1
+    b = jax.random.normal(ks[2], (k, n), jnp.float32) * 0.1
+    g = jax.random.normal(ks[3], (m, n), jnp.float32)
+
+    def runner(bl):
+        if path == "hw_fwd":
+            return lambda: ops.cac_matmul(x, w, b, interpret=interpret, **bl)
+        if path == "train_fwd":
+            return lambda: ops.cac_train_matmul(x, w, b, interpret=interpret, **bl)
+        if path == "train_bwd":
+            f = lambda: jax.vjp(
+                lambda *a: ops.cac_train_matmul(*a, interpret=interpret, **bl), x, w, b
+            )[1](g)
+            return f
+        if path == "bnn":
+            return lambda: ops.bnn_matmul(x, w, interpret=interpret, **bl)
+        raise ValueError(f"no measured runner for path {path!r}")
+
+    best, best_t = None, float("inf")
+    seen = set()
+    for cand in candidates or _CANDIDATES:
+        cl = _clamp(m, k, n, {**DEFAULT_BLOCKS, **cand})
+        key = tuple(sorted(cl.items()))
+        if key in seen:  # distinct candidates can clamp to the same legal tile
+            continue
+        seen.add(key)
+        fn = runner(cl)
+        try:
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn())
+            t = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue  # illegal tiling for this backend: skip candidate
+        if t < best_t:
+            best, best_t = cl, t
+    if best is None:
+        best = _clamp(m, k, n, heuristic_blocks(m, k, n, path))
+    _store_cache(_cache_key(path, m, k, n), best)
+    return best

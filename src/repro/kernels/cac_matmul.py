@@ -7,15 +7,21 @@ that dataflow for the HBM->VMEM->VREG hierarchy:
   * grid (M/bm, N/bn, K/bk); the (bk, bn) threshold block stays resident in
     VMEM while activation blocks stream over the k-grid — "threshold-block-
     stationary", the BlockSpec rendition of weight-stationary systolic flow;
-  * inside a block, a fori_loop walks the bk inputs one row at a time, each
-    step doing a (bm, bn) broadcast compare + select + accumulate on the VPU
-    — the direct analogue of one systolic beat (one comparator op per PE);
+  * inside a block, a fori_loop walks the bk inputs ``bk_sub`` rows at a
+    time; each step materializes a whole (bm, bk_sub, bn) broadcast-compare
+    in VREGs and reduces it on the VPU — a *vectorized* systolic beat
+    (bk_sub comparator waves issued as one fused compare-select-reduce),
+    replacing the old one-row-per-step serial schedule and its bk dynamic
+    row slices. ``bk_sub`` is the largest divisor of bk whose sub-tile fits
+    the VREG working-set budget (autotune.pick_block_k_sub);
   * the out block accumulates across the k-grid (k innermost), so partial
     sums never round-trip to HBM.
 
 Backward (training STE) kernels recompute the hard-tanh mask blockwise from
 (x, w, beta) — the (M, K, N) mask tensor NEVER materializes, which is the
-whole point: at LM scale it would be ~10^12 elements.
+whole point: at LM scale it would be ~10^12 elements. The one-pass
+``cac_train_bwd_fused_call`` produces (dx, dw, dbeta) from a *single* mask
+recompute per block; the split dx / dw calls remain for A/B benchmarking.
 
 All kernels run under interpret=True on CPU (how tests validate them) and
 compile to Mosaic on real TPUs.
@@ -23,17 +29,20 @@ compile to Mosaic on real TPUs.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .autotune import pick_block_k_sub
 
 __all__ = [
     "cac_matmul_kernel_call",
     "cac_train_fwd_call",
     "cac_train_bwd_dx_call",
     "cac_train_bwd_dw_call",
+    "cac_train_bwd_fused_call",
 ]
 
 
@@ -41,12 +50,16 @@ def _cdiv(a: int, b: int) -> int:
     return -(-a // b)
 
 
+def _slice_k(a: jax.Array, k0, bks: int, axis: int) -> jax.Array:
+    return jax.lax.dynamic_slice_in_dim(a, k0, bks, axis=axis)
+
+
 # ---------------------------------------------------------------------------
 # Hardware-form forward: y[m,n] = sum_k s[k,n] * Thres(x[m,k] - tau[k,n])
 # ---------------------------------------------------------------------------
 
 
-def _cac_fwd_kernel(x_ref, tau_ref, s_ref, o_ref):
+def _cac_fwd_kernel(x_ref, tau_ref, s_ref, o_ref, *, bk_sub: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -56,12 +69,19 @@ def _cac_fwd_kernel(x_ref, tau_ref, s_ref, o_ref):
     s = s_ref[...].astype(jnp.float32)  # (bk, bn)
     bk = x.shape[1]
 
-    def beat(k, acc):
-        # one systolic beat: compare one input row against its threshold row
-        cmp = x[:, k][:, None] >= tau[k][None, :]  # (bm, bn)
-        return acc + jnp.where(cmp, s[k][None, :], -s[k][None, :])
+    def beat(i, acc):
+        # one vectorized beat: bk_sub comparator waves as a single
+        # (bm, bk_sub, bn) broadcast-compare + select, reduced over k_sub
+        k0 = i * bk_sub
+        xs = _slice_k(x, k0, bk_sub, 1)  # (bm, bk_sub)
+        ts = _slice_k(tau, k0, bk_sub, 0)  # (bk_sub, bn)
+        ss = _slice_k(s, k0, bk_sub, 0)
+        cmp = xs[:, :, None] >= ts[None]
+        return acc + jnp.sum(jnp.where(cmp, ss[None], -ss[None]), axis=1)
 
-    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(o_ref.shape, jnp.float32))
+    acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, jnp.zeros(o_ref.shape, jnp.float32)
+    )
     o_ref[...] += acc.astype(o_ref.dtype)
 
 
@@ -73,6 +93,7 @@ def cac_matmul_kernel_call(
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
+    block_k_sub: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """x: (M, K); tau, s: (K, N) -> (M, N) float32. Shapes must divide blocks
@@ -81,9 +102,10 @@ def cac_matmul_kernel_call(
     _, n = tau.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0, (m, k, n, bm, bk, bn)
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        _cac_fwd_kernel,
+        functools.partial(_cac_fwd_kernel, bk_sub=bks),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -101,7 +123,7 @@ def cac_matmul_kernel_call(
 # ---------------------------------------------------------------------------
 
 
-def _cac_train_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+def _cac_train_fwd_kernel(x_ref, w_ref, b_ref, o_ref, *, bk_sub: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
@@ -111,24 +133,32 @@ def _cac_train_fwd_kernel(x_ref, w_ref, b_ref, o_ref):
     b = b_ref[...].astype(jnp.float32)
     bk = x.shape[1]
 
-    def beat(k, acc):
-        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
-        return acc + jnp.where(pre >= 0, 1.0, -1.0)
+    def beat(i, acc):
+        k0 = i * bk_sub
+        xs = _slice_k(x, k0, bk_sub, 1)
+        ws = _slice_k(w, k0, bk_sub, 0)
+        bs = _slice_k(b, k0, bk_sub, 0)
+        pre = xs[:, :, None] * ws[None] + bs[None]  # (bm, bk_sub, bn)
+        return acc + jnp.sum(jnp.where(pre >= 0, 1.0, -1.0), axis=1)
 
-    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(o_ref.shape, jnp.float32))
+    acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, jnp.zeros(o_ref.shape, jnp.float32)
+    )
     o_ref[...] += acc.astype(o_ref.dtype)
 
 
 def cac_train_fwd_call(
-    x, w, beta, *, block_m=256, block_n=256, block_k=512, interpret=False
+    x, w, beta, *, block_m=256, block_n=256, block_k=512,
+    block_k_sub: Optional[int] = None, interpret=False,
 ) -> jax.Array:
     m, k = x.shape
     _, n = w.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
     grid = (m // bm, n // bn, k // bk)
     return pl.pallas_call(
-        _cac_train_fwd_kernel,
+        functools.partial(_cac_train_fwd_kernel, bk_sub=bks),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
@@ -146,7 +176,7 @@ def cac_train_fwd_call(
 # ---------------------------------------------------------------------------
 
 
-def _cac_bwd_dx_kernel(x_ref, w_ref, b_ref, g_ref, dx_ref):
+def _cac_bwd_dx_kernel(x_ref, w_ref, b_ref, g_ref, dx_ref, *, bk_sub: int):
     """dx[m,k] = sum_n g[m,n] * 1[|pre| <= 1] * w[k,n]; accumulates over the
     n-grid (innermost)."""
 
@@ -160,27 +190,37 @@ def _cac_bwd_dx_kernel(x_ref, w_ref, b_ref, g_ref, dx_ref):
     g = g_ref[...].astype(jnp.float32)  # (bm, bn)
     bk = x.shape[1]
 
-    def beat(k, acc):
-        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
+    def beat(i, acc):
+        k0 = i * bk_sub
+        xs = _slice_k(x, k0, bk_sub, 1)
+        ws = _slice_k(w, k0, bk_sub, 0)
+        bs = _slice_k(b, k0, bk_sub, 0)
+        pre = xs[:, :, None] * ws[None] + bs[None]  # (bm, bk_sub, bn)
         mask = jnp.abs(pre) <= 1.0
-        # effective weight block row (the MXU-able Ŵ of DESIGN.md §2)
-        contrib = jnp.sum(jnp.where(mask, g * w[k][None, :], 0.0), axis=1)  # (bm,)
-        return acc.at[:, k].add(contrib)
+        # effective weight block (the MXU-able Ŵ of DESIGN.md §2)
+        contrib = jnp.sum(
+            jnp.where(mask, g[:, None, :] * ws[None], 0.0), axis=2
+        )  # (bm, bk_sub)
+        return jax.lax.dynamic_update_slice_in_dim(acc, contrib, k0, axis=1)
 
-    acc = jax.lax.fori_loop(0, bk, beat, jnp.zeros(dx_ref.shape, jnp.float32))
+    acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, jnp.zeros(dx_ref.shape, jnp.float32)
+    )
     dx_ref[...] += acc.astype(dx_ref.dtype)
 
 
 def cac_train_bwd_dx_call(
-    x, w, beta, g, *, block_m=256, block_n=256, block_k=512, interpret=False
+    x, w, beta, g, *, block_m=256, block_n=256, block_k=512,
+    block_k_sub: Optional[int] = None, interpret=False,
 ) -> jax.Array:
     m, k = x.shape
     _, n = w.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
     grid = (m // bm, k // bk, n // bn)  # n innermost: dx block accumulates
     return pl.pallas_call(
-        _cac_bwd_dx_kernel,
+        functools.partial(_cac_bwd_dx_kernel, bk_sub=bks),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
@@ -194,7 +234,7 @@ def cac_train_bwd_dx_call(
     )(x, w, beta, g)
 
 
-def _cac_bwd_dw_kernel(x_ref, w_ref, b_ref, g_ref, dw_ref, db_ref):
+def _cac_bwd_dw_kernel(x_ref, w_ref, b_ref, g_ref, dw_ref, db_ref, *, bk_sub: int):
     """dw[k,n] = sum_m g*mask*x; dbeta[k,n] = sum_m g*mask. Accumulates over
     the m-grid (innermost)."""
 
@@ -209,30 +249,40 @@ def _cac_bwd_dw_kernel(x_ref, w_ref, b_ref, g_ref, dw_ref, db_ref):
     g = g_ref[...].astype(jnp.float32)
     bk = x.shape[1]
 
-    def beat(k, carry):
+    def beat(i, carry):
         dw_acc, db_acc = carry
-        pre = x[:, k][:, None] * w[k][None, :] + b[k][None, :]
-        gm = jnp.where(jnp.abs(pre) <= 1.0, g, 0.0)  # (bm, bn)
-        db_row = jnp.sum(gm, axis=0)  # (bn,)
-        dw_row = jnp.sum(gm * x[:, k][:, None], axis=0)  # (bn,)
-        return dw_acc.at[k].add(dw_row), db_acc.at[k].add(db_row)
+        k0 = i * bk_sub
+        xs = _slice_k(x, k0, bk_sub, 1)  # (bm, bk_sub)
+        ws = _slice_k(w, k0, bk_sub, 0)  # (bk_sub, bn)
+        bs = _slice_k(b, k0, bk_sub, 0)
+        pre = xs[:, :, None] * ws[None] + bs[None]
+        gm = jnp.where(jnp.abs(pre) <= 1.0, g[:, None, :], 0.0)  # (bm,bk_sub,bn)
+        db_rows = jnp.sum(gm, axis=0)  # (bk_sub, bn)
+        dw_rows = jnp.sum(gm * xs[:, :, None], axis=0)  # (bk_sub, bn)
+        dw_acc = jax.lax.dynamic_update_slice_in_dim(dw_acc, dw_rows, k0, 0)
+        db_acc = jax.lax.dynamic_update_slice_in_dim(db_acc, db_rows, k0, 0)
+        return dw_acc, db_acc
 
     z = jnp.zeros(dw_ref.shape, jnp.float32)
-    dw_acc, db_acc = jax.lax.fori_loop(0, bk, beat, (z, jnp.zeros_like(z)))
+    dw_acc, db_acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, (z, jnp.zeros_like(z))
+    )
     dw_ref[...] += dw_acc.astype(dw_ref.dtype)
     db_ref[...] += db_acc.astype(db_ref.dtype)
 
 
 def cac_train_bwd_dw_call(
-    x, w, beta, g, *, block_m=256, block_n=256, block_k=512, interpret=False
+    x, w, beta, g, *, block_m=256, block_n=256, block_k=512,
+    block_k_sub: Optional[int] = None, interpret=False,
 ) -> Tuple[jax.Array, jax.Array]:
     m, k = x.shape
     _, n = w.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
     grid = (k // bk, n // bn, m // bm)  # m innermost: dw/db blocks accumulate
     return pl.pallas_call(
-        _cac_bwd_dw_kernel,
+        functools.partial(_cac_bwd_dw_kernel, bk_sub=bks),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda kk, j, i: (i, kk)),
@@ -245,6 +295,107 @@ def cac_train_bwd_dw_call(
             pl.BlockSpec((bk, bn), lambda kk, j, i: (kk, j)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+            jax.ShapeDtypeStruct((k, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w, beta, g)
+
+
+# ---------------------------------------------------------------------------
+# One-pass fused backward: (dx, dw, dbeta) from a single mask recompute
+# ---------------------------------------------------------------------------
+
+
+def _cac_bwd_fused_kernel(
+    x_ref, w_ref, b_ref, g_ref, dx_ref, dw_ref, db_ref, *, bk_sub: int
+):
+    """Grid (M/bm, K/bk, N/bn), n innermost. Per step the hard-tanh mask is
+    recomputed ONCE and feeds all three gradients — vs. twice across the
+    split dx/dw calls. dx blocks accumulate over the consecutive n-grid.
+    dw/dbeta blocks are each visited once per m-step; Mosaic only guarantees
+    output-window carry-over across CONSECUTIVE same-index steps, so this
+    kernel requires a single m-block (M <= block_m) — then every dw/dbeta
+    block is visited exactly once and dx accumulates innermost. ops.py
+    enforces the guard and falls back to the two-call path otherwise."""
+    i, j = pl.program_id(0), pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init_dx():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+
+    @pl.when(i == 0)
+    def _init_dw():
+        dw_ref[...] = jnp.zeros_like(dw_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    w = w_ref[...].astype(jnp.float32)  # (bk, bn)
+    b = b_ref[...].astype(jnp.float32)
+    g = g_ref[...].astype(jnp.float32)  # (bm, bn)
+    bk = x.shape[1]
+
+    def beat(t, carry):
+        dx_acc, dw_acc, db_acc = carry
+        k0 = t * bk_sub
+        xs = _slice_k(x, k0, bk_sub, 1)  # (bm, bk_sub)
+        ws = _slice_k(w, k0, bk_sub, 0)  # (bk_sub, bn)
+        bs = _slice_k(b, k0, bk_sub, 0)
+        pre = xs[:, :, None] * ws[None] + bs[None]  # (bm, bk_sub, bn)
+        gm = jnp.where(jnp.abs(pre) <= 1.0, g[:, None, :], 0.0)
+        dx_rows = jnp.sum(gm * ws[None], axis=2)  # (bm, bk_sub)
+        dw_rows = jnp.sum(gm * xs[:, :, None], axis=0)  # (bk_sub, bn)
+        db_rows = jnp.sum(gm, axis=0)  # (bk_sub, bn)
+        dx_acc = jax.lax.dynamic_update_slice_in_dim(dx_acc, dx_rows, k0, 1)
+        dw_acc = jax.lax.dynamic_update_slice_in_dim(dw_acc, dw_rows, k0, 0)
+        db_acc = jax.lax.dynamic_update_slice_in_dim(db_acc, db_rows, k0, 0)
+        return dx_acc, dw_acc, db_acc
+
+    zx = jnp.zeros(dx_ref.shape, jnp.float32)
+    zw = jnp.zeros(dw_ref.shape, jnp.float32)
+    dx_acc, dw_acc, db_acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, (zx, zw, jnp.zeros_like(zw))
+    )
+    dx_ref[...] += dx_acc.astype(dx_ref.dtype)
+    dw_ref[...] += dw_acc.astype(dw_ref.dtype)
+    db_ref[...] += db_acc.astype(db_ref.dtype)
+
+
+def cac_train_bwd_fused_call(
+    x, w, beta, g, *, block_m=256, block_n=256, block_k=256,
+    block_k_sub: Optional[int] = None, interpret=False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One pallas_call -> (dx, dw, dbeta). Same padding contract as the split
+    calls: padded regions have x = 0 and g = 0, so their gradients vanish.
+
+    Requires M <= block_m (single m-block; see kernel docstring). Interpret
+    mode tolerates multiple m-blocks (the emulator round-trips output
+    windows), which tests exploit, but compiled TPU callers must not."""
+    m, k = x.shape
+    _, n = w.shape
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    assert interpret or m == bm, (
+        f"fused backward needs a single m-block on TPU (M={m} > block_m={bm})"
+    )
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
+    grid = (m // bm, k // bk, n // bn)  # n innermost: dx accumulates in VMEM
+    return pl.pallas_call(
+        functools.partial(_cac_bwd_fused_kernel, bk_sub=bks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
             jax.ShapeDtypeStruct((k, n), jnp.float32),
             jax.ShapeDtypeStruct((k, n), jnp.float32),
         ],

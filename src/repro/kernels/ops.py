@@ -3,6 +3,11 @@ block padding (with exact zero-contribution padding schemes per kernel), and
 the custom-VJP training op ``cac_train_matmul`` whose backward runs the
 blockwise mask-recompute kernels (no (M,K,N) residual — DESIGN.md §2).
 
+Block sizes are resolved per call site by ``autotune.get_blocks`` (heuristic
+table + optional measured cache), and every wrapper — including
+``cac_train_matmul`` — accepts explicit ``**blocks`` overrides
+(``block_m`` / ``block_n`` / ``block_k`` / ``block_k_sub``).
+
 ``interpret=None`` auto-selects interpret mode off-TPU, so the same call
 sites run on CPU tests and TPU deployments.
 """
@@ -14,18 +19,22 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from . import autotune
 from .bnn_matmul import bnn_matmul_kernel_call
 from .cac_matmul import (
     cac_matmul_kernel_call,
     cac_train_bwd_dw_call,
     cac_train_bwd_dx_call,
+    cac_train_bwd_fused_call,
     cac_train_fwd_call,
 )
 from .qnn_matmul import qnn_matmul_kernel_call
 
 __all__ = ["cac_matmul", "cac_train_matmul", "bnn_matmul", "qnn_matmul"]
 
-_DEF_BLOCKS = dict(block_m=256, block_n=256, block_k=512)
+# Default for the one-pass fused STE backward; the two-call path stays
+# reachable via cac_train_matmul(..., fused_bwd=False) for A/B benchmarking.
+FUSED_BWD_DEFAULT = True
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -47,11 +56,9 @@ def _pad_axis(a: jax.Array, axis: int, to: int, value=0.0) -> jax.Array:
     return jnp.pad(a, widths, constant_values=value)
 
 
-def _blocks_for(m, k, n, block_m, block_n, block_k):
-    bm = min(block_m, _round_up(m, 8))
-    bn = min(block_n, _round_up(n, 128))
-    bk = min(block_k, k)
-    return bm, bn, bk
+def _resolve_blocks(m, k, n, path, blocks) -> Tuple[int, int, int, Optional[int]]:
+    bl = autotune.get_blocks(m, k, n, path, overrides=blocks or None)
+    return bl["block_m"], bl["block_n"], bl["block_k"], bl.get("block_k_sub")
 
 
 def _flatten(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
@@ -71,18 +78,17 @@ def cac_matmul(
 
     Padding scheme: K rows padded with s = 0 contribute exactly 0; M rows and
     N cols are sliced away after the call."""
-    bl = {**_DEF_BLOCKS, **blocks}
     x2, lead = _flatten(x)
     m, k = x2.shape
     n = tau.shape[1]
-    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "hw_fwd", blocks)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     x2 = _pad_axis(x2, 0, mp)
     x2 = _pad_axis(x2, 1, kp)
     tau_p = _pad_axis(_pad_axis(tau, 0, kp), 1, np_)
     s_p = _pad_axis(_pad_axis(s, 0, kp, value=0), 1, np_)  # s=0 pad -> zero contribution
     y = cac_matmul_kernel_call(
-        x2, tau_p, s_p, block_m=bm, block_n=bn, block_k=bk,
+        x2, tau_p, s_p, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
         interpret=_auto_interpret(interpret),
     )
     return y[:m, :n].reshape(lead + (n,))
@@ -93,45 +99,64 @@ def cac_matmul(
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _cac_train(x2, w, beta, interpret):
-    return _cac_train_fwd_impl(x2, w, beta, interpret)[0]
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _cac_train(x2, w, beta, interpret, fused, blocks):
+    return _cac_train_fwd_impl(x2, w, beta, interpret, blocks)[0]
 
 
-def _cac_train_fwd_impl(x2, w, beta, interpret):
+def _cac_train_fwd_impl(x2, w, beta, interpret, blocks):
     m, k = x2.shape
     n = w.shape[1]
-    bm, bn, bk = _blocks_for(m, k, n, **{
-        "block_m": _DEF_BLOCKS["block_m"],
-        "block_n": _DEF_BLOCKS["block_n"],
-        "block_k": _DEF_BLOCKS["block_k"],
-    })
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "train_fwd", dict(blocks))
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
     wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
     bp = _pad_axis(_pad_axis(beta, 0, kp), 1, np_)
     y = cac_train_fwd_call(xp, wp, bp, block_m=bm, block_n=bn, block_k=bk,
-                           interpret=interpret)
+                           block_k_sub=bks, interpret=interpret)
     # padded K rows contribute Sign(0*0+0) = +1 each: subtract the constant
     k_pad = kp - k
     y = y[:m, :n]
     if k_pad:
         y = y - jnp.float32(k_pad)
-    return y, (xp, wp, bp, (m, k, n), (bm, bn, bk))
+    # residuals are the UNPADDED operands (re-padded in the backward): on
+    # ragged shapes the padded copies would pin up to a full extra block per
+    # axis of (x, w, beta) in HBM for the whole fwd->bwd interval.
+    return y, (x2, w, beta)
 
 
-def _cac_train_fwd(x2, w, beta, interpret):
-    y, res = _cac_train_fwd_impl(x2, w, beta, interpret)
-    return y, res
+def _cac_train_fwd(x2, w, beta, interpret, fused, blocks):
+    return _cac_train_fwd_impl(x2, w, beta, interpret, blocks)
 
 
-def _cac_train_bwd(interpret, res, g):
-    xp, wp, bp, (m, k, n), (bm, bn, bk) = res
-    gp = _pad_axis(_pad_axis(g, 0, xp.shape[0]), 1, wp.shape[1])
-    dx = cac_train_bwd_dx_call(xp, wp, bp, gp, block_m=bm, block_n=bn, block_k=bk,
-                               interpret=interpret)
-    dw, dbeta = cac_train_bwd_dw_call(xp, wp, bp, gp, block_m=bm, block_n=bn,
-                                      block_k=bk, interpret=interpret)
+def _cac_train_bwd(interpret, fused, blocks, res, g):
+    x2, w, beta = res
+    m, k = x2.shape
+    n = w.shape[1]
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "train_bwd", dict(blocks))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
+    bp = _pad_axis(_pad_axis(beta, 0, kp), 1, np_)
+    gp = _pad_axis(_pad_axis(g, 0, mp), 1, np_)
+    # The fused kernel's dw/dbeta blocks are visited once per m-block; Mosaic
+    # only guarantees output-window carry-over across consecutive same-index
+    # grid steps, so on compiled TPU the fused path needs a single m-block.
+    # Interpret mode (CPU) round-trips output windows and is safe at any nm.
+    if fused and not (interpret or mp == bm):
+        fused = False
+    if fused:
+        dx, dw, dbeta = cac_train_bwd_fused_call(
+            xp, wp, bp, gp, block_m=bm, block_n=bn, block_k=bk,
+            block_k_sub=bks, interpret=interpret,
+        )
+    else:
+        dx = cac_train_bwd_dx_call(xp, wp, bp, gp, block_m=bm, block_n=bn,
+                                   block_k=bk, block_k_sub=bks,
+                                   interpret=interpret)
+        dw, dbeta = cac_train_bwd_dw_call(xp, wp, bp, gp, block_m=bm,
+                                          block_n=bn, block_k=bk,
+                                          block_k_sub=bks, interpret=interpret)
     # padded regions: g = 0 and x = 0 there, so gradients vanish; just slice.
     return dx[:m, :k], dw[:k, :n], dbeta[:k, :n]
 
@@ -140,12 +165,24 @@ _cac_train.defvjp(_cac_train_fwd, _cac_train_bwd)
 
 
 def cac_train_matmul(
-    x: jax.Array, w: jax.Array, beta: jax.Array, *, interpret: Optional[bool] = None
+    x: jax.Array,
+    w: jax.Array,
+    beta: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+    fused_bwd: Optional[bool] = None,
+    **blocks,
 ) -> jax.Array:
-    """Training CAC with STE backward, Pallas fwd+bwd. x: (..., K) -> (..., N)."""
+    """Training CAC with STE backward, Pallas fwd+bwd. x: (..., K) -> (..., N).
+
+    ``fused_bwd=None`` (default) uses the one-pass (dx, dw, dbeta) backward
+    kernel; ``False`` selects the legacy two-call backward. ``**blocks``
+    overrides the autotuned block sizes, like the sibling wrappers."""
     x2, lead = _flatten(x)
+    fused = FUSED_BWD_DEFAULT if fused_bwd is None else fused_bwd
     y = _cac_train(x2.astype(jnp.float32), w.astype(jnp.float32),
-                   beta.astype(jnp.float32), _auto_interpret(interpret))
+                   beta.astype(jnp.float32), _auto_interpret(interpret),
+                   fused, tuple(sorted(blocks.items())))
     return y.reshape(lead + (w.shape[1],))
 
 
@@ -153,11 +190,10 @@ def bnn_matmul(x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None,
                **blocks) -> jax.Array:
     """sign(x) @ sign(w). Padding: padded K rows give sign(0)=+1 on both
     operands -> each pad row adds +1; subtract the constant."""
-    bl = {**_DEF_BLOCKS, **blocks}
     x2, lead = _flatten(x)
     m, k = x2.shape
     n = w.shape[1]
-    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    bm, bn, bk, _ = _resolve_blocks(m, k, n, "bnn", blocks)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
     wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
@@ -179,11 +215,10 @@ def qnn_matmul(
     **blocks,
 ) -> jax.Array:
     """int8 matmul + dequant. Zero padding is exact for integer dot."""
-    bl = {**_DEF_BLOCKS, **blocks}
     x2, lead = _flatten(x_int)
     m, k = x2.shape
     n = w_int.shape[1]
-    bm, bn, bk = _blocks_for(m, k, n, bl["block_m"], bl["block_n"], bl["block_k"])
+    bm, bn, bk, _ = _resolve_blocks(m, k, n, "qnn", blocks)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
     wp = _pad_axis(_pad_axis(w_int, 0, kp), 1, np_)

@@ -39,6 +39,7 @@ __all__ = ["LinearSpec", "linear_init", "linear_apply", "linear_to_serve"]
 class LinearSpec:
     mode: str = "dense"  # dense | bika | bnn | qnn8
     m: int = 1  # thresholds per edge (bika)
+    fold_m: bool = True  # fold the m axis into K: one contraction, not m
     impl: str = "fused"  # bika impl: fused (sign_ste) | cvjp (bounded-mem bwd) | pallas
     chunk: Optional[int] = None  # K-chunk for the bika scan path
     out_scale: str = "rsqrt_k"  # 'none' (paper MLPs) | 'rsqrt_k' (LM usage)
@@ -185,7 +186,13 @@ def linear_apply(params, x: jax.Array, spec: LinearSpec, *, phase: str = "train"
                     xi.astype(jnp.float32), t.astype(jnp.float32),
                     ss.astype(jnp.float32), clamp=False, acc_dtype=jnp.float32
                 )
-            y = sum(hw_mm(x_int, tau[j], s[j]) for j in range(m)).astype(cd)
+            if spec.fold_m and m > 1:
+                # m-axis folding (DESIGN.md §2): one comparator contraction
+                # over K' = m*K; exact (integer ±s sums commute)
+                tau_f, s_f = bika_core.fold_m_axis(tau, s)
+                y = hw_mm(bika_core.tile_m_axis(x_int, m), tau_f, s_f).astype(cd)
+            else:
+                y = sum(hw_mm(x_int, tau[j], s[j]) for j in range(m)).astype(cd)
             y = _maybe_out_scale(y, m * k, spec)
             return y * params["gamma"].astype(cd)
         w, beta = params["w"].astype(cd), params["beta"].astype(cd)
@@ -199,8 +206,19 @@ def linear_apply(params, x: jax.Array, spec: LinearSpec, *, phase: str = "train"
 
             mm = lambda xx, ww, bb: cac_train_matmul(xx, ww, bb)
         else:
-            mm = lambda xx, ww, bb: bika_core.bika_matmul(xx, ww, bb, chunk=spec.chunk)
-        y = sum(mm(x, w[j], beta[j]) for j in range(m))
+            # folded K' = m*K: default chunk to K so the scan's live
+            # intermediate stays at the per-m term size (see core/bika.py)
+            fold_chunk = spec.chunk if spec.chunk is not None else k
+            mm_chunk = fold_chunk if spec.fold_m and m > 1 else spec.chunk
+            mm = lambda xx, ww, bb: bika_core.bika_matmul(xx, ww, bb, chunk=mm_chunk)
+        if spec.fold_m and m > 1:
+            # one contraction over K' = m*K instead of an m-term Python sum;
+            # covers every impl incl. the XLA bika_matmul_cvjp fallback and
+            # the Pallas kernel route
+            wf, bf = bika_core.fold_m_axis(w, beta)
+            y = mm(bika_core.tile_m_axis(x, m), wf, bf)
+        else:
+            y = sum(mm(x, w[j], beta[j]) for j in range(m))
         y = _maybe_out_scale(y, m * k, spec)
         return y * params["gamma"].astype(cd)
 

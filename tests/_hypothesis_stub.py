@@ -1,0 +1,114 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The test files do ``try: from hypothesis import ... except ImportError:
+from _hypothesis_stub import ...``. This stub re-implements the tiny slice of
+the hypothesis API the suite uses (``given``, ``settings``, ``strategies``
+with integers/floats/sampled_from/lists/composite) as a fixed-seed random
+sweep: each ``@given`` test runs ``max_examples`` times with values drawn
+from a ``random.Random`` seeded per-test, so runs are reproducible and there
+is no shrinking or example database. Property coverage is weaker than real
+hypothesis but the invariants still get exercised on every CI run instead of
+the whole module dying at collection.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import types
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A strategy is just a sampler: rng -> value."""
+
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+
+def integers(min_value, max_value) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def floats(min_value, max_value, allow_nan=False, width=None, **_kw) -> _Strategy:
+    del allow_nan, width  # uniform draws are always finite
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def lists(elements: _Strategy, min_size=0, max_size=10, **_kw) -> _Strategy:
+    def sample(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.sample(rng) for _ in range(size)]
+
+    return _Strategy(sample)
+
+
+def composite(fn):
+    """``@st.composite`` — fn(draw, *args) becomes a strategy factory."""
+
+    @functools.wraps(fn)
+    def factory(*args, **kwargs):
+        def sample(rng):
+            return fn(lambda strat: strat.sample(rng), *args, **kwargs)
+
+        return _Strategy(sample)
+
+    return factory
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    """Records max_examples on the function; works above or below @given."""
+
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        def wrapper():
+            # read at call time so @settings composes in either order
+            n = getattr(wrapper, "_stub_max_examples", None) or getattr(
+                fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES
+            )
+            rng = random.Random(f"repro-stub:{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                pos = tuple(s.sample(rng) for s in arg_strategies)
+                kws = {name: s.sample(rng) for name, s in kw_strategies.items()}
+                fn(*pos, **kws)
+
+        # deliberately NOT functools.wraps: copying __wrapped__ would make
+        # pytest introspect the original signature and demand fixtures named
+        # after the strategy parameters. The wrapper takes no arguments.
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = getattr(fn, "__qualname__", fn.__name__)
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco
+
+
+class HealthCheck:
+    all = staticmethod(lambda: [])
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    sampled_from=sampled_from,
+    lists=lists,
+    composite=composite,
+)

@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # absent in some environments: deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.data.lm import LMDataConfig, lm_batch
 from repro.data.vision import digits_batch, make_digits, make_textures

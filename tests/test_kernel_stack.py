@@ -1,0 +1,250 @@
+"""Parity tests for the vectorized/fused/autotuned CAC kernel stack (PR: one
+pass STE backward, m-axis folding, shape-adaptive blocks). Everything runs
+under interpret=True on CPU.
+
+STE boundary note (same as test_kernels.py): the hard-tanh mask flips under
+fp reassociation when |pre| is within eps of 1; gradient comparisons exclude
+those measure-zero boundary elements.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bika as bc
+from repro.kernels import autotune, ops
+from repro.kernels.cac_matmul import (
+    cac_train_bwd_dw_call,
+    cac_train_bwd_dx_call,
+    cac_train_bwd_fused_call,
+)
+from repro.nn.linear import LinearSpec, linear_apply, linear_init, linear_to_serve
+
+
+def _case(m, k, n, seed=0, scale=0.5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n)) * scale
+    beta = jax.random.normal(ks[2], (k, n)) * scale
+    g = jax.random.normal(ks[3], (m, n))
+    return x, w, beta, g
+
+def _nonboundary(x, w, beta, eps=1e-4):
+    pre = x[:, :, None] * w[None] + beta[None]
+    return np.asarray(jnp.abs(jnp.abs(pre) - 1.0) > eps)
+
+
+# ---------------------------------------------------------------------------
+# One-pass fused backward
+# ---------------------------------------------------------------------------
+
+SHAPES = [(8, 16, 8), (33, 100, 17), (64, 512, 128), (128, 384, 256)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_fused_bwd_kernel_matches_two_call_kernels(m, k, n):
+    """Raw kernel level: one pallas_call == the dx-call + dw-call pair, on
+    identical (block-aligned) padded operands."""
+    x, w, beta, g = _case(m, k, n, seed=m)
+    bm, bn, bk = 32, 128, 64
+    mp, kp, np_ = -(-m // bm) * bm, -(-k // bk) * bk, -(-n // bn) * bn
+    pad = lambda a, i, to: jnp.pad(a, [(0, to - a.shape[0]) if i == 0 else (0, 0),
+                                       (0, to - a.shape[1]) if i == 1 else (0, 0)])
+    xp = pad(pad(x, 0, mp), 1, kp)
+    wp = pad(pad(w, 0, kp), 1, np_)
+    bp = pad(pad(beta, 0, kp), 1, np_)
+    gp = pad(pad(g, 0, mp), 1, np_)
+    kw = dict(block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    dxf, dwf, dbf = cac_train_bwd_fused_call(xp, wp, bp, gp, **kw)
+    dx2 = cac_train_bwd_dx_call(xp, wp, bp, gp, **kw)
+    dw2, db2 = cac_train_bwd_dw_call(xp, wp, bp, gp, **kw)
+    np.testing.assert_allclose(dxf, dx2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(dwf, dw2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(dbf, db2, atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_fused_bwd_matches_bwd_fused_reference(m, k, n):
+    """VJP level: fused one-pass backward == core/bika.py's _bwd_fused
+    reference gradients (off the STE boundary)."""
+    x, w, beta, g = _case(m, k, n, seed=m + 1)
+    dx, dw, db = jax.vjp(
+        lambda *a: ops.cac_train_matmul(*a, fused_bwd=True), x, w, beta
+    )[1](g)
+    dxr, dwr, dbr = bc._bwd_fused(x, w, beta, g)
+    nb = _nonboundary(x, w, beta)
+    nbk, nbn = nb.all(axis=2), nb.all(axis=0)
+    np.testing.assert_allclose(np.where(nbk, dx, 0), np.where(nbk, dxr, 0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.where(nbn, dw, 0), np.where(nbn, dwr, 0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.where(nbn, db, 0), np.where(nbn, dbr, 0),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES[:3])
+def test_fused_bwd_flag_matches_legacy_two_call_path(m, k, n):
+    """cac_train_matmul(fused_bwd=True) == (fused_bwd=False) through the
+    whole pad/slice plumbing on ragged shapes."""
+    x, w, beta, g = _case(m, k, n, seed=m + 2)
+    vjp = lambda fused: jax.vjp(
+        lambda *a: ops.cac_train_matmul(*a, fused_bwd=fused), x, w, beta
+    )[1](g)
+    for a, b in zip(vjp(True), vjp(False)):
+        np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_fused_bwd_batch_dims():
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 5, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.3
+    beta = jnp.zeros((32, 16))
+    y, pullback = jax.vjp(lambda *a: ops.cac_train_matmul(*a), x, w, beta)
+    dx, dw, db = pullback(jnp.ones_like(y))
+    assert dx.shape == x.shape and dw.shape == w.shape and db.shape == beta.shape
+    assert np.isfinite(np.asarray(dx)).all()
+
+
+# ---------------------------------------------------------------------------
+# m-axis folding
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mth", [2, 3])
+@pytest.mark.parametrize("impl", ["fused", "cvjp", "pallas"])
+def test_fold_m_train_bitexact_vs_per_m_loop(mth, impl):
+    """Folded (m*K) contraction == per-m Python loop, bit-for-bit (the ±1
+    terms are integers in f32: summation order cannot change the value)."""
+    spec_f = LinearSpec(mode="bika", m=mth, impl=impl, fold_m=True,
+                        out_scale="none")
+    spec_l = LinearSpec(mode="bika", m=mth, impl=impl, fold_m=False,
+                        out_scale="none")
+    from repro.nn.module import unbox
+
+    params = unbox(linear_init(jax.random.PRNGKey(3), 24, 12, spec_f,
+                               axes=(None, None)))
+    x = jax.random.normal(jax.random.PRNGKey(4), (7, 24))
+    yf = linear_apply(params, x, spec_f)
+    yl = linear_apply(params, x, spec_l)
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(yl))
+
+
+@pytest.mark.parametrize("mth", [2, 4])
+def test_fold_m_serve_bitexact_vs_per_m_loop(mth):
+    spec = LinearSpec(mode="bika", m=mth, out_scale="none")
+    from repro.nn.module import unbox
+
+    params = unbox(linear_init(jax.random.PRNGKey(5), 16, 8, spec,
+                               axes=(None, None)))
+    sp = linear_to_serve(params, spec)
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, 16))
+    yf = linear_apply(sp, x, spec, phase="serve")
+    yl = linear_apply(sp, x, dataclasses_replace(spec, fold_m=False), phase="serve")
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(yl))
+
+
+def dataclasses_replace(spec, **kw):
+    import dataclasses
+
+    return dataclasses.replace(spec, **kw)
+
+
+def test_fold_m_core_apply_bitexact_and_grads_flow():
+    mth = 3
+    p = bc.bika_linear_init(jax.random.PRNGKey(0), 24, 10, m=mth)
+    x = jax.random.normal(jax.random.PRNGKey(1), (5, 24))
+    yf = bc.bika_linear_apply(p, x, bc.BikaConfig(m=mth, fold_m=True))
+    yl = bc.bika_linear_apply(p, x, bc.BikaConfig(m=mth, fold_m=False))
+    np.testing.assert_array_equal(np.asarray(yf), np.asarray(yl))
+    # chunked scan path folds too
+    yc = bc.bika_linear_apply(p, x, bc.BikaConfig(m=mth, fold_m=True, chunk=16))
+    np.testing.assert_array_equal(np.asarray(yc), np.asarray(yl))
+    g = jax.grad(lambda pp: jnp.mean(
+        bc.bika_linear_apply(pp, x, bc.BikaConfig(m=mth, out_scale="rsqrt_k")) ** 2
+    ))(p)
+    assert g["w"].shape == (mth, 24, 10)
+    assert float(jnp.abs(g["w"]).sum()) > 0
+    assert np.isfinite(np.asarray(g["beta"])).all()
+
+
+def test_fold_helpers_roundtrip():
+    w = jnp.arange(2 * 3 * 4).reshape(2, 3, 4).astype(jnp.float32)
+    wf, bf = bc.fold_m_axis(w, w)
+    assert wf.shape == (6, 4)
+    np.testing.assert_array_equal(np.asarray(wf[:3]), np.asarray(w[0]))
+    np.testing.assert_array_equal(np.asarray(wf[3:]), np.asarray(w[1]))
+    x = jnp.arange(6).reshape(2, 3).astype(jnp.float32)
+    xt = bc.tile_m_axis(x, 2)
+    assert xt.shape == (2, 6)
+    np.testing.assert_array_equal(np.asarray(xt[:, 3:]), np.asarray(x))
+    assert bc.tile_m_axis(x, 1) is x
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+
+def test_heuristic_blocks_paths_and_shapes():
+    for path in ("hw_fwd", "train_fwd", "train_bwd", "bnn", "qnn"):
+        bl = autotune.get_blocks(300, 1000, 70, path, use_cache=False)
+        assert bl["block_m"] % 8 == 0 or bl["block_m"] >= 300
+        assert bl["block_k"] <= 1000 and bl["block_m"] >= 1 and bl["block_n"] >= 1
+    # decode-like shape widens N
+    small = autotune.get_blocks(8, 4096, 4096, "hw_fwd", use_cache=False)
+    big = autotune.get_blocks(4096, 4096, 4096, "hw_fwd", use_cache=False)
+    assert small["block_n"] >= big["block_n"]
+    assert small["block_m"] <= big["block_m"]
+
+
+def test_pick_block_k_sub_divides_and_fits():
+    for bm, bn, bk in [(256, 256, 512), (8, 128, 100), (64, 512, 384), (1, 1, 7)]:
+        bks = autotune.pick_block_k_sub(bm, bn, bk)
+        assert bk % bks == 0 and bks >= 1
+        assert bks == 1 or bm * bks * bn <= autotune.SUBTILE_BUDGET
+    assert autotune.pick_block_k_sub(256, 256, 512, requested=16) == 16
+    # requested values that do not divide bk are snapped down to a divisor
+    assert 100 % autotune.pick_block_k_sub(8, 128, 100, requested=24) == 0
+
+
+def test_block_overrides_reach_all_wrappers():
+    x, w, beta, g = _case(33, 100, 17, seed=9)
+    ov = dict(block_m=16, block_n=128, block_k=32, block_k_sub=8)
+    y = ops.cac_train_matmul(x, w, beta, **ov)
+    np.testing.assert_allclose(
+        y, ops.cac_train_matmul(x, w, beta), atol=1e-5, rtol=1e-5
+    )
+    tau, s = bc.to_hardware(w, beta)
+    np.testing.assert_allclose(
+        ops.cac_matmul(x, tau, s, **ov), ops.cac_matmul(x, tau, s),
+        atol=1e-5, rtol=1e-5,
+    )
+    dx = jax.vjp(lambda *a: ops.cac_train_matmul(*a, **ov), x, w, beta)[1](g)[0]
+    dxd = jax.vjp(lambda *a: ops.cac_train_matmul(*a), x, w, beta)[1](g)[0]
+    np.testing.assert_allclose(dx, dxd, atol=1e-4, rtol=1e-4)
+    with pytest.raises(TypeError):
+        ops.cac_matmul(x, tau, s, block_q=1)
+
+
+def test_measured_search_writes_and_uses_cache(tmp_path, monkeypatch):
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        best = autotune.measured_blocks(
+            "train_fwd", 16, 32, 16,
+            candidates=[dict(block_m=8, block_n=128, block_k=16),
+                        dict(block_m=16, block_n=128, block_k=32)],
+            iters=1, warmup=1, interpret=True,
+        )
+        assert cache.exists()
+        assert {"block_m", "block_n", "block_k"} <= set(best)
+        # get_blocks for the same (path, shape) now returns the winner
+        got = autotune.get_blocks(16, 32, 16, "train_fwd")
+        assert got["block_m"] == best["block_m"]
+        assert got["block_k"] == best["block_k"]
+        # other shapes fall back to the heuristic, not the cache entry
+        other = autotune.get_blocks(300, 1000, 70, "train_fwd")
+        assert other == autotune.get_blocks(300, 1000, 70, "train_fwd",
+                                            use_cache=False)
+    finally:
+        autotune.clear_cache()

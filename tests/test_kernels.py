@@ -9,7 +9,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # absent in some environments: deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import bika as bc
 from repro.kernels import ops, ref
