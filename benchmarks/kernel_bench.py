@@ -6,6 +6,12 @@ New-vs-old schedule A/B rows (DESIGN.md §2):
   * m-folded single contraction  vs the per-m Python-loop sum
   * autotuned (heuristic) blocks vs the old fixed 256/256/512 blocks
 
+Baseline-backend rows (DESIGN.md §3 — the registry's bnn / qnn8 kernel
+routes, same interpret-mode caveats):
+  * bnn XLA sign-matmul + qnn8 XLA int8 matmul vs the dense baseline
+  * Pallas bnn forward / packed-bitplane forward / SignSTE backward pair
+  * Pallas qnn8 int8+dequant forward
+
 Pallas interpret-mode timing is excluded from *roofline* conclusions (it is
 a Python emulator) but the fused-vs-two-call ratio is still meaningful
 there: both sides pay the same per-call emulator overhead, so fewer kernel
@@ -24,6 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bika as bika_core
+from repro.core.backend import pack_signs
+from repro.core.ste import sign_ste
 from repro.kernels import autotune, ops
 from .common import timed
 
@@ -71,6 +79,19 @@ def main(quick: bool = True) -> List[str]:
     _record(results, "bika_hw_fwd", t_hw, f"{t_hw / t_dense:.2f}x dense", rows)
     _record(results, "bika_grad_cvjp", t_gc,
             f"{t_gc / t_gf:.2f}x of fused-grad (bounded-memory backward)", rows)
+
+    # -- baseline backends, XLA routes (what non-pallas impls lower) --
+    bnn_xla = jax.jit(lambda a, b: sign_ste(a) @ sign_ste(b))
+    xi8 = jnp.clip(jnp.round(x * 16.0), -127, 127).astype(jnp.int8)
+    wi8 = jnp.clip(jnp.round(w * 64.0), -127, 127).astype(jnp.int8)
+    qnn_xla = jax.jit(lambda a, b: jax.lax.dot(
+        a, b, preferred_element_type=jnp.int32).astype(jnp.float32))
+    t_bnn_x = timed(bnn_xla, x, w)
+    t_qnn_x = timed(qnn_xla, xi8, wi8)
+    _record(results, "bnn_xla_fwd", t_bnn_x, f"{t_bnn_x / t_dense:.2f}x dense "
+            "(sign_ste matmul: the non-pallas train route)", rows)
+    _record(results, "qnn_xla_int8_fwd", t_qnn_x, f"{t_qnn_x / t_dense:.2f}x "
+            "dense (int8->int32 dot: the non-pallas serve route)", rows)
 
     # -- m-axis folding (XLA route): one contraction vs per-m Python sum.
     # The fold chunks the scan at the per-m term size (what linear_apply
@@ -142,6 +163,32 @@ def main(quick: bool = True) -> List[str]:
         fixed = autotune.get_blocks(mb, kb2, nb, "hw_fwd", use_cache=False,
                                     overrides=dict(block_m=256, block_n=256,
                                                    block_k=512))
+        # -- registry baseline routes (bnn / qnn8), interpret-mode A/Bs --
+        wbi = jnp.where(wi >= 0, 1, -1).astype(jnp.int8)
+        wpk = pack_signs(wbi)
+        t_bnnp = timed(lambda: ops.bnn_matmul(xi, wi), iters=2, warmup=1)
+        t_bnnpk = timed(lambda: ops.bnn_matmul_packed(xi, wpk), iters=2,
+                        warmup=1)
+        _record(results, f"pallas_bnn_fwd_{mi}x{ki}x{ni}", t_bnnp,
+                "1.00x baseline (sub-tiled sign-MXU forward)", rows)
+        _record(results, "pallas_bnn_packed_fwd", t_bnnpk,
+                f"{t_bnnpk / t_bnnp:.2f}x of unpacked (uint8 bitplanes "
+                "unpacked per beat; 8x less weight HBM on TPU)", rows)
+        bnn_vjp_p = lambda: jax.vjp(ops.bnn_train_matmul, xi, wi)[1](gi)
+        t_bnnb = timed(bnn_vjp_p, iters=2, warmup=1)
+        _record(results, "pallas_bnn_ste_bwd", t_bnnb,
+                f"{t_bnnb / t_bnnp:.2f}x of pallas-bnn fwd (emulator-"
+                "relative; masked dx+dw MXU pair ~= 2 contractions, no HBM "
+                "mask tensors)", rows)
+        xq8 = jnp.clip(jnp.round(xi * 16.0), -127, 127).astype(jnp.int8)
+        wq8 = jnp.clip(jnp.round(wi * 64.0), -127, 127).astype(jnp.int8)
+        wsc = jnp.abs(wi).max(axis=0, keepdims=True) / 127.0
+        t_qnnp = timed(lambda: ops.qnn_matmul(xq8, wq8, wsc, 0.05), iters=2,
+                       warmup=1)
+        _record(results, f"pallas_qnn8_fwd_{mi}x{ki}x{ni}", t_qnnp,
+                f"{t_qnnp / t_bnnp:.2f}x of pallas-bnn (int8 beats + fused "
+                "dequant)", rows)
+
         t_def = timed(lambda: ops.cac_matmul(xb, tb, sb, **fixed),
                       iters=2, warmup=1)
         t_tuned = timed(lambda: ops.cac_matmul(xb, tb, sb, **bl),

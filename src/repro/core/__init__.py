@@ -3,13 +3,16 @@
 Layout:
   ste.py         Sign / round / clip straight-through estimators (§II-B).
   thresholds.py  Eq. 1-7 piecewise-constant <-> weighted-threshold conversion.
+  backend.py     QuantBackend protocol + registry: the single dispatch point
+                 for dense/bika/bnn/qnn8 (and any future) projection modes.
   bika.py        BiKA layers (training + hardware/CAC forms, saturating acc).
   bnn.py         FINN-style binarized baseline (XNOR-popcount semantics).
   qnn.py         8-bit QNN baseline (fake-quant + FINN-R threshold requant).
   kan.py         B-spline KAN baseline (pykan functional form in JAX).
   convert.py     KAN -> m-threshold / BiKA -> int8 hardware conversions.
 """
-from . import bika, bnn, convert, kan, qnn, ste, thresholds
+from . import backend, bika, bnn, convert, kan, qnn, ste, thresholds
+from .backend import QuantBackend, get_backend, register, registered_backends
 from .bika import (
     BikaConfig,
     bika_conv2d_apply,
@@ -24,6 +27,11 @@ from .bika import (
 from .ste import clip_ste, round_ste, sign, sign_ste
 
 __all__ = [
+    "backend",
+    "QuantBackend",
+    "get_backend",
+    "register",
+    "registered_backends",
     "bika",
     "bnn",
     "convert",

@@ -1,0 +1,558 @@
+"""Unified quantized-backend registry (DESIGN.md §3).
+
+Every projection mode the framework supports — dense (the ANN reference),
+bika (the paper's comparator-accumulate pattern), bnn (FINN-style
+XNOR-popcount) and qnn8 (8-bit integer) — implements one contract:
+
+    init_train / init_serve   parameter trees for the two phases
+    apply_train / apply_serve the float-latent and hardware-form forwards
+    to_serve                  trained float params -> hardware form
+    kernel_route              name of the Pallas route in kernels/ops.py
+                              (resolvable via ops.kernel_route), or None
+                              for XLA-only paths
+    autotune_key              (path, MxKxN) block-cache key for the route
+
+``nn/linear.py`` is a thin dispatcher over this registry: there is no
+per-mode branching anywhere above this file, so adding a new backend (e.g.
+ternary) means writing one class here and calling ``register`` — every
+layer (attention/MLP/MoE/conv), every model, the serving engine and the
+benchmarks pick it up through ``LinearSpec.mode``.
+
+Mode conventions that used to be scattered as ``if mode == ...`` ladders
+also live on the backend: ``default_bias`` (does the mode carry an additive
+bias like an ordinary ANN layer) and ``inter_act`` (the between-layer
+activation — identity for modes whose nonlinearity is built into the
+contraction, ReLU for the arithmetic ones).
+
+The registry deliberately knows nothing about jax.nn modules: specs are
+duck-typed (any object with LinearSpec's fields works) and params are
+``nn.module.P`` boxes so sharding axes ride along.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import bika as bika_core
+from . import qnn as qnn_core
+from .ste import sign, sign_ste
+
+__all__ = [
+    "LinearSpec",
+    "QuantBackend",
+    "register",
+    "get_backend",
+    "registered_backends",
+    "pack_signs",
+    "unpack_signs",
+    "DenseBackend",
+    "BikaBackend",
+    "BnnBackend",
+    "Qnn8Backend",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Per-callsite projection options (hashable: safe as a static jit arg).
+
+    ``mode`` selects the registered backend; the remaining fields are the
+    union of per-backend knobs (each backend reads the ones it understands
+    and ignores the rest — documented per field).
+    """
+
+    mode: str = "dense"  # any registered backend name
+    m: int = 1  # thresholds per edge (bika)
+    fold_m: bool = True  # fold the m axis into K: one contraction, not m
+    impl: str = "fused"  # fused (XLA) | cvjp | cvjp_tiled | pallas (kernel route)
+    chunk: Optional[int] = None  # K-chunk for the bika scan path
+    out_scale: str = "rsqrt_k"  # 'none' (paper MLPs) | 'rsqrt_k' (LM usage)
+    bias: bool = False  # additive bias (dense/qnn8; bika folds it into beta)
+    pack_signs: bool = False  # serve-form bika/bnn: 1-bit packed sign planes
+    act_scale: float = 0.05  # serve-form activation quantization LSB
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers (sign bit-packing — used by the bika and bnn serve forms)
+# ---------------------------------------------------------------------------
+
+
+def unpack_signs(packed: jax.Array, k: int) -> jax.Array:
+    """(..., K/8, N) uint8 bitplanes -> (..., K, N) +/-1 int8."""
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    bits = (packed[..., :, None, :] >> shifts[:, None]) & 1  # (..., K/8, 8, N)
+    bits = bits.reshape(packed.shape[:-2] + (k, packed.shape[-1]))
+    return (2 * bits.astype(jnp.int8) - 1).astype(jnp.int8)
+
+
+def pack_signs(s: jax.Array) -> jax.Array:
+    """(..., K, N) +/-1 -> (..., K/8, N) uint8 bitplanes (bit j = edge k%8==j)."""
+    k = s.shape[-2]
+    assert k % 8 == 0
+    bits = (s > 0).astype(jnp.uint8).reshape(s.shape[:-2] + (k // 8, 8, s.shape[-1]))
+    shifts = jnp.arange(8, dtype=jnp.uint8)
+    return jnp.sum(bits << shifts[:, None], axis=-2).astype(jnp.uint8)
+
+
+def P(value, axes=None):
+    """Box a parameter with logical sharding axes. Deferred import: nn is a
+    layer above core, and nn/linear imports this module — a top-level import
+    of repro.nn here would close an import cycle."""
+    from repro.nn.module import P as _P
+
+    return _P(value, axes)
+
+
+def _uniform(key, shape, dtype, bound):
+    return jax.random.uniform(key, shape, dtype, -bound, bound)
+
+
+def _out_scale(y: jax.Array, mk: int, spec) -> jax.Array:
+    if spec.out_scale == "rsqrt_k":
+        return y / jnp.sqrt(jnp.asarray(mk, y.dtype))
+    return y
+
+
+def _merge_blocks(blocks: Optional[Dict[str, int]]) -> Dict[str, int]:
+    return dict(blocks) if blocks else {}
+
+
+# ---------------------------------------------------------------------------
+# The backend contract
+# ---------------------------------------------------------------------------
+
+
+class QuantBackend:
+    """Base class / protocol for one quantized projection family.
+
+    Subclasses override everything below. ``spec`` arguments are duck-typed
+    ``LinearSpec``-shaped objects; ``blocks`` is an optional dict of Pallas
+    block-size overrides forwarded to the kernel route (None = autotuned).
+    """
+
+    name: str = "?"
+    # does this mode carry an additive bias like an ordinary ANN layer?
+    default_bias: bool = False
+
+    def inter_act(self, x: jax.Array) -> jax.Array:
+        """Between-layer activation (identity when the nonlinearity is
+        inside the contraction — bika's Sign, bnn's binarization)."""
+        return x
+
+    # -- parameters ---------------------------------------------------------
+    def init_train(self, key, k: int, n: int, spec, *, axes):
+        raise NotImplementedError
+
+    def init_serve(self, key, k: int, n: int, spec, *, axes):
+        raise NotImplementedError
+
+    def to_serve(self, params, spec):
+        """Trained float params (unboxed) -> hardware serve form (unboxed)."""
+        raise NotImplementedError
+
+    def train_param_keys(self, spec) -> Tuple[frozenset, frozenset]:
+        """(required, optional) key sets identifying this backend's training
+        param dicts — what ``convert.tree_to_serve`` matches leaf-dicts
+        against when converting a whole model tree."""
+        raise NotImplementedError
+
+    # -- forwards -----------------------------------------------------------
+    def apply_train(self, params, x: jax.Array, spec, *, blocks=None) -> jax.Array:
+        raise NotImplementedError
+
+    def apply_serve(self, params, x: jax.Array, spec, *, blocks=None) -> jax.Array:
+        raise NotImplementedError
+
+    # -- kernel metadata ----------------------------------------------------
+    def kernel_route(self, spec, phase: str = "train") -> Optional[str]:
+        """Name of the Pallas route in ``kernels.ops.KERNEL_ROUTES`` this
+        backend uses for ``phase`` under ``spec`` (None = pure-XLA path)."""
+        return None
+
+    def autotune_path(self, spec, phase: str = "train") -> Optional[str]:
+        """The ``kernels.autotune`` heuristic/cache path for the route."""
+        return None
+
+    def autotune_key(self, spec, phase: str, m: int, k: int, n: int) -> Optional[str]:
+        """On-disk block-cache key the route's blocks resolve under."""
+        path = self.autotune_path(spec, phase)
+        if path is None:
+            return None
+        from repro.kernels import autotune
+
+        return autotune.cache_key(path, m, k, n)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, QuantBackend] = {}
+
+
+def register(backend: QuantBackend, *, name: Optional[str] = None) -> QuantBackend:
+    """Register a backend instance under ``name`` (default: backend.name)."""
+    _REGISTRY[name or backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> QuantBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown linear mode {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def registered_backends() -> Dict[str, QuantBackend]:
+    return dict(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# dense — the ANN reference
+# ---------------------------------------------------------------------------
+
+
+class DenseBackend(QuantBackend):
+    name = "dense"
+    default_bias = True
+
+    def inter_act(self, x):
+        return jax.nn.relu(x)
+
+    def init_train(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        bound = 1.0 / (k**0.5)
+        kw, _ = jax.random.split(key)
+        p = {"w": P(_uniform(kw, (k, n), spec.pdtype, bound), (in_ax, out_ax))}
+        if spec.bias:
+            p["b"] = P(jnp.zeros((n,), spec.pdtype), (out_ax,))
+        return p
+
+    init_serve = init_train  # dense serves its training parameters
+
+    def to_serve(self, params, spec):
+        return dict(params)
+
+    def train_param_keys(self, spec):
+        return frozenset({"w"}), frozenset({"b"})
+
+    def apply_train(self, params, x, spec, *, blocks=None):
+        y = x @ params["w"].astype(x.dtype)
+        if "b" in params:
+            y = y + params["b"].astype(x.dtype)
+        return y
+
+    apply_serve = apply_train
+
+
+# ---------------------------------------------------------------------------
+# bika — the paper's comparator-accumulate pattern
+# ---------------------------------------------------------------------------
+
+
+class BikaBackend(QuantBackend):
+    name = "bika"
+    default_bias = False  # beta plays the role of the bias, per edge
+
+    def init_train(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        bound = 1.0 / (k**0.5)
+        kw, kb = jax.random.split(key)
+        pd = spec.pdtype
+        w = _uniform(kw, (spec.m, k, n), pd, bound)
+        beta = _uniform(kb, (spec.m, k, n), pd, bound)
+        return {
+            "w": P(w, (None, in_ax, out_ax)),
+            "beta": P(beta, (None, in_ax, out_ax)),
+            "gamma": P(jnp.ones((n,), pd), (out_ax,)),
+        }
+
+    def init_serve(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        tau = jnp.zeros((spec.m, k, n), jnp.int8)
+        p = {"tau": P(tau, (None, in_ax, out_ax))}
+        if spec.pack_signs:
+            assert k % 8 == 0, f"pack_signs requires K%8==0, got K={k}"
+            p["s"] = P(jnp.zeros((spec.m, k // 8, n), jnp.uint8), (None, in_ax, out_ax))
+        else:
+            p["s"] = P(jnp.ones((spec.m, k, n), jnp.int8), (None, in_ax, out_ax))
+        p["gamma"] = P(jnp.ones((n,), jnp.float32), (out_ax,))
+        return p
+
+    def to_serve(self, params, spec):
+        tau, s = bika_core.to_hardware(params["w"], params["beta"])
+        tau_int, _ = bika_core.quantize_thresholds(tau, spec.act_scale)
+        s = s.astype(jnp.int8)
+        if spec.pack_signs:
+            s = pack_signs(s)
+        return {"tau": tau_int, "s": s, "gamma": params["gamma"].astype(jnp.float32)}
+
+    def train_param_keys(self, spec):
+        return frozenset({"w", "beta", "gamma"}), frozenset()
+
+    def apply_train(self, params, x, spec, *, blocks=None):
+        cd = x.dtype
+        w, beta = params["w"].astype(cd), params["beta"].astype(cd)
+        m, k = w.shape[0], w.shape[1]
+        if spec.impl == "cvjp":
+            mm = lambda xx, ww, bb: bika_core.bika_matmul_cvjp(xx, ww, bb)
+        elif spec.impl == "cvjp_tiled":
+            mm = lambda xx, ww, bb: bika_core.bika_matmul_cvjp(xx, ww, bb, tiled=True)
+        elif spec.impl == "pallas":
+            from repro.kernels.ops import cac_train_matmul
+
+            bl = _merge_blocks(blocks)
+            mm = lambda xx, ww, bb: cac_train_matmul(xx, ww, bb, **bl)
+        else:
+            # folded K' = m*K: default chunk to K so the scan's live
+            # intermediate stays at the per-m term size (see core/bika.py)
+            fold_chunk = spec.chunk if spec.chunk is not None else k
+            mm_chunk = fold_chunk if spec.fold_m and m > 1 else spec.chunk
+            mm = lambda xx, ww, bb: bika_core.bika_matmul(xx, ww, bb, chunk=mm_chunk)
+        if spec.fold_m and m > 1:
+            # one contraction over K' = m*K instead of an m-term Python sum;
+            # covers every impl incl. the XLA bika_matmul_cvjp fallback and
+            # the Pallas kernel route (DESIGN.md §2)
+            wf, bf = bika_core.fold_m_axis(w, beta)
+            y = mm(bika_core.tile_m_axis(x, m), wf, bf)
+        else:
+            y = sum(mm(x, w[j], beta[j]) for j in range(m))
+        y = _out_scale(y, m * k, spec)
+        return y * params["gamma"].astype(cd)
+
+    def apply_serve(self, params, x, spec, *, blocks=None):
+        cd = x.dtype
+        tau, s = params["tau"], params["s"]
+        m, k = tau.shape[0], tau.shape[1]
+        if spec.pack_signs:
+            s = unpack_signs(s, k)
+        # activation quantization onto the int8 threshold grid
+        x_int = jnp.clip(jnp.round(x / spec.act_scale), -128, 127).astype(jnp.int8)
+        if spec.impl == "cvjp_tiled":
+            hw_mm = lambda xi, t, ss: bika_core.bika_matmul_hw_tiled(xi, t, ss)
+        elif spec.impl == "pallas":
+            from repro.kernels.ops import cac_matmul
+
+            bl = _merge_blocks(blocks)
+            hw_mm = lambda xi, t, ss: cac_matmul(
+                xi.astype(jnp.float32), t.astype(jnp.float32),
+                ss.astype(jnp.float32), **bl
+            )
+        else:  # fused comparator fusion (TPU-ideal; Pallas = explicit form)
+            hw_mm = lambda xi, t, ss: bika_core.bika_matmul_hw(
+                xi.astype(jnp.float32), t.astype(jnp.float32),
+                ss.astype(jnp.float32), clamp=False, acc_dtype=jnp.float32
+            )
+        if spec.fold_m and m > 1:
+            # m-axis folding (DESIGN.md §2): one comparator contraction
+            # over K' = m*K; exact (integer ±s sums commute)
+            tau_f, s_f = bika_core.fold_m_axis(tau, s)
+            y = hw_mm(bika_core.tile_m_axis(x_int, m), tau_f, s_f).astype(cd)
+        else:
+            y = sum(hw_mm(x_int, tau[j], s[j]) for j in range(m)).astype(cd)
+        y = _out_scale(y, m * k, spec)
+        return y * params["gamma"].astype(cd)
+
+    def kernel_route(self, spec, phase="train"):
+        if spec.impl != "pallas":
+            return None
+        return "cac_train" if phase == "train" else "cac_hw"
+
+    def autotune_path(self, spec, phase="train"):
+        if spec.impl != "pallas":
+            return None
+        return "train_fwd" if phase == "train" else "hw_fwd"
+
+
+# ---------------------------------------------------------------------------
+# bnn — FINN-style XNOR-popcount baseline
+# ---------------------------------------------------------------------------
+
+
+class BnnBackend(QuantBackend):
+    name = "bnn"
+    default_bias = False
+
+    def init_train(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        bound = 1.0 / (k**0.5)
+        kw, _ = jax.random.split(key)
+        return {
+            "w": P(_uniform(kw, (k, n), spec.pdtype, bound), (in_ax, out_ax)),
+            "gamma": P(jnp.ones((n,), spec.pdtype), (out_ax,)),
+        }
+
+    def init_serve(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        if spec.pack_signs:
+            assert k % 8 == 0
+            p = {"wb": P(jnp.zeros((k // 8, n), jnp.uint8), (in_ax, out_ax))}
+        else:
+            p = {"wb": P(jnp.ones((k, n), jnp.int8), (in_ax, out_ax))}
+        p["gamma"] = P(jnp.ones((n,), jnp.float32), (out_ax,))
+        return p
+
+    def to_serve(self, params, spec):
+        wb = sign(params["w"]).astype(jnp.int8)
+        if spec.pack_signs:
+            wb = pack_signs(wb)
+        return {"wb": wb, "gamma": params["gamma"].astype(jnp.float32)}
+
+    def train_param_keys(self, spec):
+        return frozenset({"w", "gamma"}), frozenset()
+
+    def apply_train(self, params, x, spec, *, blocks=None):
+        cd = x.dtype
+        k = params["w"].shape[0]
+        if spec.impl == "pallas":
+            # Pallas route with the SignSTE custom VJP: fwd + both backward
+            # contractions run as sub-tiled MXU kernels (kernels/bnn_matmul)
+            from repro.kernels.ops import bnn_train_matmul
+
+            y = bnn_train_matmul(x, params["w"].astype(cd),
+                                 **_merge_blocks(blocks)).astype(cd)
+        else:
+            xb = sign_ste(x)
+            wb = sign_ste(params["w"].astype(cd))
+            y = xb @ wb
+        y = _out_scale(y, k, spec)
+        return y * params["gamma"].astype(cd)
+
+    def apply_serve(self, params, x, spec, *, blocks=None):
+        cd = x.dtype
+        wb = params["wb"]
+        k = wb.shape[0] * (8 if spec.pack_signs else 1)
+        if spec.impl == "pallas":
+            from repro.kernels.ops import bnn_matmul, bnn_matmul_packed
+
+            bl = _merge_blocks(blocks)
+            if spec.pack_signs:
+                # packed path: the uint8 bitplanes go to VMEM as-is and are
+                # unpacked per beat inside the kernel — 8x less weight HBM
+                # traffic, matching the bika packed-serve story
+                y = bnn_matmul_packed(x, wb, **bl).astype(cd)
+            else:
+                y = bnn_matmul(x, wb.astype(jnp.float32), **bl).astype(cd)
+        else:
+            if spec.pack_signs:
+                wb = unpack_signs(wb, k)
+            xb = sign(x)
+            y = (xb @ wb.astype(cd)).astype(cd)
+        y = _out_scale(y, k, spec)
+        return y * params["gamma"].astype(cd)
+
+    def kernel_route(self, spec, phase="train"):
+        if spec.impl != "pallas":
+            return None
+        if phase == "train":
+            return "bnn_train"
+        return "bnn_packed" if spec.pack_signs else "bnn"
+
+    def autotune_path(self, spec, phase="train"):
+        if spec.impl != "pallas":
+            return None
+        return "bnn"
+
+
+# ---------------------------------------------------------------------------
+# qnn8 — 8-bit integer baseline (fake-quant train, int8 serve)
+# ---------------------------------------------------------------------------
+
+
+class Qnn8Backend(QuantBackend):
+    name = "qnn8"
+    default_bias = True
+
+    def inter_act(self, x):
+        return jax.nn.relu(x)
+
+    def init_train(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        bound = 1.0 / (k**0.5)
+        kw, _ = jax.random.split(key)
+        pd = spec.pdtype
+        p = {
+            "w": P(_uniform(kw, (k, n), pd, bound), (in_ax, out_ax)),
+            "amax": P(jnp.asarray(6.0, pd), ()),
+        }
+        if spec.bias:
+            p["b"] = P(jnp.zeros((n,), pd), (out_ax,))
+        return p
+
+    def init_serve(self, key, k, n, spec, *, axes):
+        in_ax, out_ax = axes
+        p = {
+            "w_int": P(jnp.zeros((k, n), jnp.int8), (in_ax, out_ax)),
+            "w_scale": P(jnp.ones((1, n), jnp.float32), (None, out_ax)),
+        }
+        if spec.bias:
+            p["b"] = P(jnp.zeros((n,), jnp.float32), (out_ax,))
+        return p
+
+    def to_serve(self, params, spec):
+        w_int, w_scale = qnn_core.quantize_weights(params["w"])
+        out = {"w_int": w_int, "w_scale": w_scale.astype(jnp.float32)}
+        if "b" in params:
+            out["b"] = params["b"].astype(jnp.float32)
+        return out
+
+    def train_param_keys(self, spec):
+        return frozenset({"w", "amax"}), frozenset({"b"})
+
+    def apply_train(self, params, x, spec, *, blocks=None):
+        xq = qnn_core.fake_quant_activations(x, params["amax"].astype(x.dtype))
+        wq = qnn_core.fake_quant_weights(params["w"].astype(x.dtype))
+        y = xq @ wq
+        if "b" in params:
+            y = y + params["b"].astype(x.dtype)
+        return y
+
+    def apply_serve(self, params, x, spec, *, blocks=None):
+        cd = x.dtype
+        x_int = jnp.clip(jnp.round(x / spec.act_scale), -128, 127).astype(jnp.int8)
+        if spec.impl == "pallas":
+            from repro.kernels.ops import qnn_matmul
+
+            y = qnn_matmul(x_int, params["w_int"], params["w_scale"],
+                           spec.act_scale, **_merge_blocks(blocks)).astype(cd)
+        else:
+            acc = jax.lax.dot(
+                x_int.reshape((-1, x_int.shape[-1])),
+                params["w_int"],
+                preferred_element_type=jnp.int32,
+            ).reshape(x.shape[:-1] + (params["w_int"].shape[-1],))
+            y = acc.astype(cd) * (params["w_scale"].astype(cd) * spec.act_scale)
+        if "b" in params:
+            y = y + params["b"].astype(cd)
+        return y
+
+    def kernel_route(self, spec, phase="train"):
+        if spec.impl != "pallas" or phase == "train":
+            return None  # training is float fake-quant: an XLA matmul
+        return "qnn8"
+
+    def autotune_path(self, spec, phase="train"):
+        if spec.impl != "pallas" or phase == "train":
+            return None
+        return "qnn8"
+
+
+register(DenseBackend())
+register(BikaBackend())
+register(BnnBackend())
+register(Qnn8Backend())

@@ -7,6 +7,11 @@
 
 * BiKA training form (w, beta) -> hardware form (tau int8, s 1-bit) with an
   input-scale-aware integer threshold grid — what the accelerator loads.
+
+* Whole-model conversion (``tree_to_serve``): walk any trained param tree and
+  rewrite every linear-leaf dict into its backend's hardware serve form via
+  the QuantBackend registry — the train->deploy step of the serving story
+  (serve/engine.py builds engines from trained checkpoints with it).
 """
 from __future__ import annotations
 
@@ -18,12 +23,15 @@ import numpy as np
 
 from . import kan as kan_mod
 from . import thresholds as thr
+from .backend import get_backend
 from .bika import quantize_thresholds, to_hardware
 
 __all__ = [
     "kan_layer_to_thresholds",
     "threshold_layer_apply",
     "bika_params_to_hw_int8",
+    "params_to_serve",
+    "tree_to_serve",
     "approximation_error",
 ]
 
@@ -94,6 +102,46 @@ def bika_params_to_hw_int8(
     tau, s = to_hardware(params["w"], params["beta"])
     tau_int, _ = quantize_thresholds(tau, x_scale)
     return tau_int, s.astype(jnp.int8), x_scale
+
+
+def params_to_serve(params: Dict, spec) -> Dict:
+    """One linear layer's trained params -> hardware serve form, via the
+    registered backend for ``spec.mode`` (registry-dispatched twin of
+    ``nn.linear.linear_to_serve`` for core-level callers)."""
+    return get_backend(spec.mode).to_serve(params, spec)
+
+
+def _is_arrayish(v) -> bool:
+    return hasattr(v, "shape") and hasattr(v, "dtype")
+
+
+def tree_to_serve(tree, spec):
+    """Convert every linear leaf of a trained model tree to serve form.
+
+    A "linear leaf" is a dict whose keys match the backend's
+    ``train_param_keys(spec)`` (required ⊆ keys ⊆ required ∪ optional) with
+    array values. Stacked-layer leaves ((L, ...) arrays from
+    ``stack_layers``) convert in one shot — every backend's ``to_serve`` is
+    elementwise over leading dims. Non-linear params (embeddings, norms,
+    caches) pass through untouched, so the result slots into the
+    ``phase='serve'`` model apply built by ``build_model``.
+    """
+    be = get_backend(spec.mode)
+    req, opt = be.train_param_keys(spec)
+
+    def walk(node):
+        if isinstance(node, dict):
+            keys = frozenset(node)
+            if req <= keys <= (req | opt) and all(
+                _is_arrayish(v) for v in node.values()
+            ):
+                return be.to_serve(node, spec)
+            return {k2: walk(v) for k2, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(tree)
 
 
 def approximation_error(

@@ -36,15 +36,18 @@ QMAX_A = 255  # uint8 activations
 
 
 def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
-    """Per-output-channel symmetric int8 quantization. Returns (w_int, scale)."""
-    scale = jnp.max(jnp.abs(w), axis=0, keepdims=True) / QMAX_W
+    """Per-output-channel symmetric int8 quantization. Returns (w_int, scale).
+
+    w: (..., K, N); the max runs over K (axis -2) so stacked layer trees
+    ((L, K, N) leaves from ``stack_layers``) quantize per layer per channel."""
+    scale = jnp.max(jnp.abs(w), axis=-2, keepdims=True) / QMAX_W
     scale = jnp.maximum(scale, 1e-12)
     w_int = jnp.clip(jnp.round(w / scale), -QMAX_W, QMAX_W).astype(jnp.int8)
     return w_int, scale
 
 
 def fake_quant_weights(w: jax.Array) -> jax.Array:
-    scale = jnp.max(jnp.abs(jax.lax.stop_gradient(w)), axis=0, keepdims=True) / QMAX_W
+    scale = jnp.max(jnp.abs(jax.lax.stop_gradient(w)), axis=-2, keepdims=True) / QMAX_W
     scale = jnp.maximum(scale, 1e-12)
     return round_ste(jnp.clip(w / scale, -QMAX_W, QMAX_W)) * scale
 

@@ -13,7 +13,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["make_mesh", "single_device_mesh", "best_effort_mesh"]
+__all__ = ["make_mesh", "abstract_mesh", "single_device_mesh", "best_effort_mesh"]
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
@@ -21,6 +21,22 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     devs = jax.devices()
     assert len(devs) >= n, f"need {n} devices, have {len(devs)}"
     return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Device-free mesh for spec-level tests and dry-runs.
+
+    ``jax.sharding.AbstractMesh`` changed its constructor across JAX
+    releases: newer versions take ``(axis_sizes, axis_names)`` while e.g.
+    0.4.37 takes a single ``((name, size), ...)`` shape tuple (the two-arg
+    form there raises TypeError("'int' object is not iterable") inside
+    jax._src.mesh). Normalize both here so callers never touch the raw
+    constructor."""
+    am = jax.sharding.AbstractMesh
+    try:
+        return am(tuple(shape), tuple(axes))
+    except TypeError:
+        return am(tuple(zip(axes, shape)))
 
 
 def single_device_mesh(axes: Tuple[str, ...] = ("data", "model")) -> Mesh:

@@ -3,11 +3,14 @@
 Two layers, both deterministic by default:
 
   1. ``heuristic_blocks(m, k, n, path)`` — a small closed-form table keyed on
-     the contraction *path* (hw_fwd / train_fwd / train_bwd / bnn / qnn) and
-     adapted to the problem shape: skinny-M (decode-like) problems widen the
-     N block to keep the VPU lanes full, long-K problems lengthen the K block
-     to amortize output-block traffic, and backward paths shrink block_k
-     because three live output accumulators raise VMEM pressure.
+     the contraction *path* (hw_fwd / train_fwd / train_bwd for the CAC
+     stack; bnn / bnn_bwd / qnn8 for the baseline backends) and adapted to
+     the problem shape: skinny-M (decode-like) problems widen the N block to
+     keep the VPU lanes full, long-K problems lengthen the K block to
+     amortize output-block traffic, backward paths shrink block_k because
+     multiple live output accumulators raise VMEM pressure, and the int8
+     MXU path (qnn8) deepens K further because its operand blocks are 4x
+     smaller than f32 at equal tile counts.
   2. ``measured_blocks(...)`` — an optional measured search that times the
      real kernel call over a candidate list and persists the winner in an
      on-disk JSON cache (env ``REPRO_AUTOTUNE_CACHE`` or
@@ -35,6 +38,7 @@ __all__ = [
     "get_blocks",
     "measured_blocks",
     "pick_block_k_sub",
+    "cache_key",
     "cache_path",
     "clear_cache",
 ]
@@ -49,14 +53,26 @@ SUBTILE_BUDGET = 1 << 19
 #   hw_fwd    — serving comparator contraction (x, tau, s)
 #   train_fwd — Sign(x*w + beta) forward
 #   train_bwd — STE backward (fused or two-call; 3 output accumulators)
-#   bnn / qnn — MXU baselines (standard tiled matmul)
+#   bnn       — sign(x) @ sign(w) MXU forward (train fwd + serve, incl. the
+#               packed-bitplane serve kernel)
+#   bnn_bwd   — BNN SignSTE backward (two masked MXU contractions)
+#   qnn8      — int8 x int8 -> int32 serve matmul + fused dequant
+#   qnn       — legacy alias of qnn8 (pre-registry cache entries)
 _BASE: Dict[str, Dict[str, int]] = {
     "hw_fwd": dict(block_m=256, block_n=256, block_k=512),
     "train_fwd": dict(block_m=256, block_n=256, block_k=512),
     "train_bwd": dict(block_m=256, block_n=256, block_k=256),
     "bnn": dict(block_m=256, block_n=256, block_k=512),
+    "bnn_bwd": dict(block_m=256, block_n=256, block_k=256),
+    "qnn8": dict(block_m=256, block_n=256, block_k=512),
     "qnn": dict(block_m=256, block_n=256, block_k=512),
 }
+
+# MXU baseline paths whose VMEM operand blocks are int8: the same VMEM
+# budget holds 4x the K depth of an f32 block. The bnn paths do NOT qualify:
+# their x/w blocks arrive as f32 (signs are computed in-kernel), so they
+# keep the f32 K-depth rules.
+_INT_PATHS = ("qnn8", "qnn")
 
 _SUBLANE, _LANE = 8, 128  # f32 min tile (sublane x lane)
 
@@ -73,12 +89,15 @@ def heuristic_blocks(m: int, k: int, n: int, path: str = "train_fwd") -> Dict[st
     if m <= 64:
         # decode-like: few rows, so spend the VMEM on wider N instead
         bm, bn = 64, min(2 * bn, 512)
-    if k >= 4096 and path not in ("train_bwd",):
+    if k >= 4096 and path not in ("train_bwd", "bnn_bwd"):
         # long contractions: longer K blocks cut output-block init/flush count
         bk = 1024
     if n <= 128:
         # narrow outputs: reclaim the N budget into K depth
-        bk = max(bk, 1024) if path != "train_bwd" else bk
+        bk = max(bk, 1024) if path not in ("train_bwd", "bnn_bwd") else bk
+    if path in _INT_PATHS and k >= 2048:
+        # int8/packed operands: double K depth at the same VMEM footprint
+        bk = max(bk, 2048 if k >= 8192 else 1024)
     return dict(block_m=bm, block_n=bn, block_k=bk)
 
 
@@ -91,12 +110,25 @@ def _clamp(m: int, k: int, n: int, bl: Dict[str, int]) -> Dict[str, int]:
 
 
 def pick_block_k_sub(bm: int, bn: int, bk: int, requested: Optional[int] = None,
-                     budget: int = SUBTILE_BUDGET) -> int:
-    """Largest divisor of bk such that bm * bk_sub * bn <= budget (>= 1)."""
+                     budget: int = SUBTILE_BUDGET, multiple: int = 1) -> int:
+    """Largest divisor of bk such that bm * bk_sub * bn <= budget (>= 1).
+
+    ``multiple`` additionally constrains the result to a multiple of that
+    value when one divides bk (the packed-bitplane kernel needs bk_sub % 8
+    == 0 so each beat slices whole uint8 rows); falls back to the
+    unconstrained divisor when bk itself has no such divisor <= cap."""
     cap = requested if requested else max(budget // max(bm * bn, 1), 1)
     bks = max(min(cap, bk), 1)
     while bk % bks:
         bks -= 1
+    if multiple > 1 and bks % multiple:
+        cand = (bks // multiple) * multiple
+        while cand >= multiple and bk % cand:
+            cand -= multiple
+        if cand >= multiple:
+            bks = cand
+        elif bk % multiple == 0:
+            bks = multiple
     return bks
 
 
@@ -115,8 +147,13 @@ def cache_path() -> str:
     )
 
 
-def _cache_key(path: str, m: int, k: int, n: int) -> str:
+def cache_key(path: str, m: int, k: int, n: int) -> str:
+    """Public cache-key form: ``backend:path:MxKxN`` — what backends report
+    via ``QuantBackend.autotune_key`` and what the JSON cache is keyed on."""
     return f"{jax.default_backend()}:{path}:{m}x{k}x{n}"
+
+
+_cache_key = cache_key  # internal alias (pre-registry name)
 
 
 def _load_cache() -> Dict[str, Dict[str, int]]:
@@ -238,6 +275,15 @@ def measured_blocks(
             return f
         if path == "bnn":
             return lambda: ops.bnn_matmul(x, w, interpret=interpret, **bl)
+        if path == "bnn_bwd":
+            return lambda: jax.vjp(
+                lambda *a: ops.bnn_train_matmul(*a, interpret=interpret, **bl), x, w
+            )[1](g)
+        if path in ("qnn8", "qnn"):
+            xi = jnp.clip(jnp.round(x * 16.0), -127, 127).astype(jnp.int8)
+            wi = jnp.clip(jnp.round(w * 64.0), -127, 127).astype(jnp.int8)
+            ws = jnp.abs(w).max(axis=0, keepdims=True) / 127.0
+            return lambda: ops.qnn_matmul(xi, wi, ws, 0.05, interpret=interpret, **bl)
         raise ValueError(f"no measured runner for path {path!r}")
 
     best, best_t = None, float("inf")

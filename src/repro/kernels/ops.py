@@ -20,7 +20,12 @@ import jax
 import jax.numpy as jnp
 
 from . import autotune
-from .bnn_matmul import bnn_matmul_kernel_call
+from .bnn_matmul import (
+    bnn_bwd_dw_call,
+    bnn_bwd_dx_call,
+    bnn_matmul_kernel_call,
+    bnn_packed_matmul_kernel_call,
+)
 from .cac_matmul import (
     cac_matmul_kernel_call,
     cac_train_bwd_dw_call,
@@ -30,7 +35,16 @@ from .cac_matmul import (
 )
 from .qnn_matmul import qnn_matmul_kernel_call
 
-__all__ = ["cac_matmul", "cac_train_matmul", "bnn_matmul", "qnn_matmul"]
+__all__ = [
+    "cac_matmul",
+    "cac_train_matmul",
+    "bnn_matmul",
+    "bnn_matmul_packed",
+    "bnn_train_matmul",
+    "qnn_matmul",
+    "KERNEL_ROUTES",
+    "kernel_route",
+]
 
 # Default for the one-pass fused STE backward; the two-call path stays
 # reachable via cac_train_matmul(..., fused_bwd=False) for A/B benchmarking.
@@ -186,23 +200,107 @@ def cac_train_matmul(
     return y.reshape(lead + (w.shape[1],))
 
 
+def _bnn_fwd_padded(x2, w, interpret, blocks):
+    """Shared forward plumbing for bnn_matmul and the training op."""
+    m, k = x2.shape
+    n = w.shape[1]
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "bnn", dict(blocks))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
+    y = bnn_matmul_kernel_call(xp, wp, block_m=bm, block_n=bn, block_k=bk,
+                               block_k_sub=bks, interpret=interpret)
+    y = y[:m, :n]
+    if kp - k:
+        y = y - jnp.float32(kp - k)
+    return y
+
+
 def bnn_matmul(x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None,
                **blocks) -> jax.Array:
     """sign(x) @ sign(w). Padding: padded K rows give sign(0)=+1 on both
     operands -> each pad row adds +1; subtract the constant."""
     x2, lead = _flatten(x)
+    y = _bnn_fwd_padded(x2, w, _auto_interpret(interpret), blocks)
+    return y.reshape(lead + (w.shape[1],))
+
+
+def bnn_matmul_packed(x: jax.Array, wp: jax.Array, *,
+                      interpret: Optional[bool] = None, **blocks) -> jax.Array:
+    """sign(x) @ unpack(wp) for uint8 bitplane weights ((K/8, N): the bnn
+    serve form). The bitplanes stay packed all the way into VMEM and are
+    unpacked per beat in VREGs — 8x less weight HBM traffic than the int8
+    route, mirroring the bika packed-serve story.
+
+    Padding: K is padded in units of 8 rows with zero *bytes*; a zero byte
+    unpacks to eight -1 weights against sign(0) = +1 activations, so each
+    padded K row contributes -1 — add the constant back."""
+    x2, lead = _flatten(x)
+    m, k = x2.shape
+    k8, n = wp.shape
+    assert k == 8 * k8, f"x K={k} must equal 8 * packed rows ({k8})"
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "bnn", dict(blocks))
+    bk = max((min(bk, k) // 8) * 8, 8)  # K grid steps slice whole bytes
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wpp = _pad_axis(_pad_axis(wp, 0, kp // 8), 1, np_)
+    y = bnn_packed_matmul_kernel_call(
+        xp, wpp, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
+        interpret=_auto_interpret(interpret),
+    )
+    y = y[:m, :n]
+    if kp - k:
+        y = y + jnp.float32(kp - k)
+    return y.reshape(lead + (n,))
+
+
+# ---------------------------------------------------------------------------
+# BNN training op with SignSTE custom VJP (fwd + bwd all on the kernel route)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _bnn_train(x2, w, interpret, blocks):
+    return _bnn_fwd_padded(x2, w, interpret, blocks)
+
+
+def _bnn_train_fwd(x2, w, interpret, blocks):
+    # residuals are the unpadded float operands; the backward recomputes the
+    # sign/mask terms blockwise (no (M, N)-shaped mask tensors in HBM)
+    return _bnn_fwd_padded(x2, w, interpret, blocks), (x2, w)
+
+
+def _bnn_train_bwd(interpret, blocks, res, g):
+    x2, w = res
     m, k = x2.shape
     n = w.shape[1]
-    bm, bn, bk, _ = _resolve_blocks(m, k, n, "bnn", blocks)
+    bm, bn, bk, _ = _resolve_blocks(m, k, n, "bnn_bwd", dict(blocks))
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
     wp = _pad_axis(_pad_axis(w, 0, kp), 1, np_)
-    y = bnn_matmul_kernel_call(xp, wp, block_m=bm, block_n=bn, block_k=bk,
-                               interpret=_auto_interpret(interpret))
-    y = y[:m, :n]
-    if kp - k:
-        y = y - jnp.float32(kp - k)
-    return y.reshape(lead + (n,))
+    gp = _pad_axis(_pad_axis(g, 0, mp), 1, np_)
+    # padded regions: g = 0 there, so both contractions vanish; just slice.
+    dx = bnn_bwd_dx_call(xp, wp, gp, block_m=bm, block_n=bn, block_k=bk,
+                         interpret=interpret)
+    dw = bnn_bwd_dw_call(xp, wp, gp, block_m=bm, block_n=bn, block_k=bk,
+                         interpret=interpret)
+    return dx[:m, :k], dw[:k, :n]
+
+
+_bnn_train.defvjp(_bnn_train_fwd, _bnn_train_bwd)
+
+
+def bnn_train_matmul(x: jax.Array, w: jax.Array, *,
+                     interpret: Optional[bool] = None, **blocks) -> jax.Array:
+    """Training BNN with the SignSTE backward on the Pallas route:
+    y = sign(x) @ sign(w);  dx = (g @ sign(w)^T) * 1[|x| <= 1];
+    dw = (sign(x)^T @ g) * 1[|w| <= 1] — identical semantics to the XLA
+    ``sign_ste(x) @ sign_ste(w)`` fallback. x: (..., K) -> (..., N);
+    ``**blocks`` overrides the autotuned forward blocks."""
+    x2, lead = _flatten(x)
+    y = _bnn_train(x2.astype(jnp.float32), w.astype(jnp.float32),
+                   _auto_interpret(interpret), tuple(sorted(blocks.items())))
+    return y.reshape(lead + (w.shape[1],))
 
 
 def qnn_matmul(
@@ -218,11 +316,37 @@ def qnn_matmul(
     x2, lead = _flatten(x_int)
     m, k = x2.shape
     n = w_int.shape[1]
-    bm, bn, bk, _ = _resolve_blocks(m, k, n, "qnn", blocks)
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "qnn8", blocks)
     mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
     xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
     wp = _pad_axis(_pad_axis(w_int, 0, kp), 1, np_)
     sp = _pad_axis(w_scale.reshape(1, -1), 1, np_)
     y = qnn_matmul_kernel_call(xp, wp, sp, x_scale, block_m=bm, block_n=bn,
-                               block_k=bk, interpret=_auto_interpret(interpret))
+                               block_k=bk, block_k_sub=bks,
+                               interpret=_auto_interpret(interpret))
     return y[:m, :n].reshape(lead + (n,))
+
+
+# ---------------------------------------------------------------------------
+# Kernel-route table: the names QuantBackend.kernel_route resolves against
+# ---------------------------------------------------------------------------
+
+KERNEL_ROUTES: dict = {
+    "cac_hw": cac_matmul,
+    "cac_train": cac_train_matmul,
+    "bnn": bnn_matmul,
+    "bnn_packed": bnn_matmul_packed,
+    "bnn_train": bnn_train_matmul,
+    "qnn8": qnn_matmul,
+}
+
+
+def kernel_route(name: str):
+    """Resolve a route name (from ``QuantBackend.kernel_route``) to its
+    jit-able wrapper. Raises KeyError with the known names on a miss."""
+    try:
+        return KERNEL_ROUTES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown kernel route {name!r}; known: {sorted(KERNEL_ROUTES)}"
+        ) from None

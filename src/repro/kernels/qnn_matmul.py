@@ -3,25 +3,45 @@ fused per-column dequantization (the FINN-R threshold-requant collapses to a
 scale on TPU). int8 operands double MXU throughput (394 TOPS on v5e) and
 halve HBM traffic vs bf16 — this kernel is the serving path of the QNN
 comparison rows in the Table III analogue.
+
+Same schedule treatment as the CAC stack (DESIGN.md §2/§3): grid
+(M/bm, N/bn, K/bk) with the k-grid innermost accumulating into a VMEM fp32
+block, and a ``bk_sub`` beat loop inside each block so only an
+(bm, bk_sub) x (bk_sub, bn) operand pair is widened to int32 per beat.
+Blocks come from kernels/autotune.py (path ``qnn8``) and every caller
+accepts explicit overrides.
 """
 from __future__ import annotations
+
+import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .autotune import pick_block_k_sub
+
 __all__ = ["qnn_matmul_kernel_call"]
 
 
-def _qnn_kernel(x_ref, w_ref, scale_ref, o_ref, *, n_k: int):
+def _qnn_kernel(x_ref, w_ref, scale_ref, o_ref, *, bk_sub: int, n_k: int):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
 
-    acc = jnp.dot(
-        x_ref[...].astype(jnp.int32),
-        w_ref[...].astype(jnp.int32),
-        preferred_element_type=jnp.int32,
+    x = x_ref[...]  # (bm, bk) int8
+    w = w_ref[...]  # (bk, bn) int8
+    bk = x.shape[1]
+
+    def beat(i, acc):
+        k0 = i * bk_sub
+        xs = jax.lax.dynamic_slice_in_dim(x, k0, bk_sub, 1).astype(jnp.int32)
+        ws = jax.lax.dynamic_slice_in_dim(w, k0, bk_sub, 0).astype(jnp.int32)
+        return acc + jnp.dot(xs, ws, preferred_element_type=jnp.int32)
+
+    acc = jax.lax.fori_loop(
+        0, bk // bk_sub, beat, jnp.zeros(o_ref.shape, jnp.int32)
     )
     o_ref[...] += acc.astype(jnp.float32)
 
@@ -39,6 +59,7 @@ def qnn_matmul_kernel_call(
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
+    block_k_sub: Optional[int] = None,
     interpret: bool = False,
 ) -> jax.Array:
     """x_int: (M, K) int8; w_int: (K, N) int8; w_scale: (1, N) fp32."""
@@ -46,12 +67,11 @@ def qnn_matmul_kernel_call(
     _, n = w_int.shape
     bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
     assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    bks = pick_block_k_sub(bm, bn, bk, block_k_sub)
     n_k = k // bk
     scale = (w_scale.reshape(1, n) * jnp.float32(x_scale)).astype(jnp.float32)
-    import functools
-
     return pl.pallas_call(
-        functools.partial(_qnn_kernel, n_k=n_k),
+        functools.partial(_qnn_kernel, bk_sub=bks, n_k=n_k),
         grid=(m // bm, n // bn, n_k),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),

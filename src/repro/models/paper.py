@@ -18,11 +18,22 @@ from typing import Any, Dict, List, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import get_backend
+from repro.core.convert import tree_to_serve
 from repro.nn.conv import conv2d_apply, conv2d_init, maxpool2d
 from repro.nn.linear import LinearSpec, linear_apply, linear_init
 from repro.nn.module import unbox
 
-__all__ = ["PaperConfig", "TFC", "SFC", "LFC", "CNV", "build_paper_model", "PAPER_MODELS"]
+__all__ = [
+    "PaperConfig",
+    "TFC",
+    "SFC",
+    "LFC",
+    "CNV",
+    "build_paper_model",
+    "paper_model_to_serve",
+    "PAPER_MODELS",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,13 +56,14 @@ class PaperConfig:
         # raw +/-K integer logits saturate softmax and training collapses
         # (measured: chance accuracy at out_scale='none'). The deployed CAC
         # datapath is unchanged — integer comparator sums; gamma/rsqrt fold
-        # into the next layer's thresholds. dense/qnn8 keep a bias like
-        # ordinary ANNs and ignore out_scale.
+        # into the next layer's thresholds. Modes that carry an additive
+        # bias like ordinary ANNs declare it on their registered backend
+        # (QuantBackend.default_bias) and ignore out_scale.
         return LinearSpec(
             mode=self.mode,
             m=self.m,
             out_scale="rsqrt_k",
-            bias=self.mode in ("dense", "qnn8"),
+            bias=get_backend(self.mode).default_bias,
         )
 
     def replace(self, **kw) -> "PaperConfig":
@@ -68,10 +80,10 @@ PAPER_MODELS = {"tfc": TFC, "sfc": SFC, "lfc": LFC, "cnv": CNV}
 
 
 def _inter_act(mode: str, x: jax.Array) -> jax.Array:
-    """Between-layer activation: modes with built-in nonlinearity use none."""
-    if mode in ("dense", "qnn8"):
-        return jax.nn.relu(x)
-    return x  # bika: Sign inside; bnn: sign applied to activations inside
+    """Between-layer activation — owned by the backend (identity for modes
+    whose nonlinearity is built into the contraction: bika's Sign, bnn's
+    binarization; ReLU for the arithmetic dense/qnn8 modes)."""
+    return get_backend(mode).inter_act(x)
 
 
 def _mlp_init(key: jax.Array, cfg: PaperConfig, phase: str):
@@ -152,3 +164,13 @@ def build_paper_model(cfg: PaperConfig, *, phase: str = "train"):
             lambda p, x: _cnv_apply(p, x, cfg, phase),
         )
     raise ValueError(cfg.kind)
+
+
+def paper_model_to_serve(params, cfg: PaperConfig):
+    """Trained paper-model params -> hardware serve form (registry-driven).
+
+    The result plugs straight into ``build_paper_model(cfg, phase='serve')``'s
+    apply: every linear/conv leaf is rewritten by its backend's ``to_serve``
+    and everything else passes through.
+    """
+    return tree_to_serve(params, cfg.spec())

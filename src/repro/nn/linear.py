@@ -1,7 +1,8 @@
-"""Backend-switchable linear projection — BiKA as a first-class feature.
+"""Backend-switchable linear projection — a thin registry dispatcher.
 
 Every projection matmul in the framework (QKV/O, FFN, MoE experts, LM head,
-im2col convs) goes through this layer, selected by ``LinearSpec.mode``:
+im2col convs) goes through this layer. ``LinearSpec.mode`` names a backend
+registered in ``repro.core.backend``:
 
   dense  — ordinary matmul (the "ANN" reference).
   bika   — the paper's CAC pattern: y = sum_k SignSTE(x*w + beta) (m per edge).
@@ -17,49 +18,31 @@ Two phases exist per mode:
           These carry the paper's resource story onto TPU: serving weight
           bytes drop 1.78x (int8) to 3.55x (packed) vs bf16 — a direct cut to
           the memory roofline term that dominates decode.
+
+There is deliberately NO per-mode branching here: ``linear_init`` /
+``linear_apply`` / ``linear_to_serve`` resolve the backend from the registry
+and forward. New backends plug in by registering in core/backend.py alone
+(DESIGN.md §3). ``blocks`` forwards Pallas block-size overrides to backends
+whose ``spec.impl == 'pallas'`` routes (None = autotuned via
+kernels/autotune.py).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import bika as bika_core
-from repro.core import bnn as bnn_core
-from repro.core import qnn as qnn_core
-from repro.core.ste import sign, sign_ste
-from .module import P
+# Module-object import (not `from ... import name`): repro.core.backend
+# imports repro.nn.module, so binding the module and resolving attributes at
+# call time keeps the import graph cycle-safe from either entry point.
+from repro.core import backend as _backend
+from repro.core.backend import LinearSpec, pack_signs, unpack_signs
 
-__all__ = ["LinearSpec", "linear_init", "linear_apply", "linear_to_serve"]
+__all__ = ["LinearSpec", "linear_init", "linear_apply", "linear_to_serve",
+           "pack_signs"]
 
-
-@dataclasses.dataclass(frozen=True)
-class LinearSpec:
-    mode: str = "dense"  # dense | bika | bnn | qnn8
-    m: int = 1  # thresholds per edge (bika)
-    fold_m: bool = True  # fold the m axis into K: one contraction, not m
-    impl: str = "fused"  # bika impl: fused (sign_ste) | cvjp (bounded-mem bwd) | pallas
-    chunk: Optional[int] = None  # K-chunk for the bika scan path
-    out_scale: str = "rsqrt_k"  # 'none' (paper MLPs) | 'rsqrt_k' (LM usage)
-    bias: bool = False  # additive bias (dense/qnn8; bika folds it into beta)
-    pack_signs: bool = False  # serve-form bika/bnn: 1-bit packed sign planes
-    act_scale: float = 0.05  # serve-form activation quantization LSB
-    param_dtype: str = "float32"
-    compute_dtype: str = "float32"
-
-    @property
-    def pdtype(self):
-        return jnp.dtype(self.param_dtype)
-
-    @property
-    def cdtype(self):
-        return jnp.dtype(self.compute_dtype)
-
-
-def _uniform(key, shape, dtype, bound):
-    return jax.random.uniform(key, shape, dtype, -bound, bound)
+# Back-compat alias: pre-registry code imported the unpacker privately.
+_unpack_signs = unpack_signs
 
 
 def linear_init(
@@ -72,214 +55,28 @@ def linear_init(
     phase: str = "train",
 ):
     """Returns a boxed param tree. ``axes = (in_axis, out_axis)`` logical names."""
-    in_ax, out_ax = axes
-    bound = 1.0 / (k**0.5)  # python math: k is static (trace/vmap-safe)
-    kw, kb = jax.random.split(key)
-    pd = spec.pdtype
-
-    if spec.mode == "dense":
-        p = {"w": P(_uniform(kw, (k, n), pd, bound), (in_ax, out_ax))}
-        if spec.bias:
-            p["b"] = P(jnp.zeros((n,), pd), (out_ax,))
-        return p
-
-    if spec.mode == "bika":
-        if phase == "serve":
-            # hardware form: int8 thresholds, signs (+optionally packed)
-            tau = jnp.zeros((spec.m, k, n), jnp.int8)
-            p = {"tau": P(tau, (None, in_ax, out_ax))}
-            if spec.pack_signs:
-                assert k % 8 == 0, f"pack_signs requires K%8==0, got K={k}"
-                p["s"] = P(jnp.zeros((spec.m, k // 8, n), jnp.uint8), (None, in_ax, out_ax))
-            else:
-                p["s"] = P(jnp.ones((spec.m, k, n), jnp.int8), (None, in_ax, out_ax))
-            p["gamma"] = P(jnp.ones((n,), jnp.float32), (out_ax,))
-            return p
-        w = _uniform(kw, (spec.m, k, n), pd, bound)
-        beta = _uniform(kb, (spec.m, k, n), pd, bound)
-        return {
-            "w": P(w, (None, in_ax, out_ax)),
-            "beta": P(beta, (None, in_ax, out_ax)),
-            "gamma": P(jnp.ones((n,), pd), (out_ax,)),
-        }
-
-    if spec.mode == "bnn":
-        if phase == "serve":
-            if spec.pack_signs:
-                assert k % 8 == 0
-                p = {"wb": P(jnp.zeros((k // 8, n), jnp.uint8), (in_ax, out_ax))}
-            else:
-                p = {"wb": P(jnp.ones((k, n), jnp.int8), (in_ax, out_ax))}
-            p["gamma"] = P(jnp.ones((n,), jnp.float32), (out_ax,))
-            return p
-        return {
-            "w": P(_uniform(kw, (k, n), pd, bound), (in_ax, out_ax)),
-            "gamma": P(jnp.ones((n,), pd), (out_ax,)),
-        }
-
-    if spec.mode == "qnn8":
-        if phase == "serve":
-            p = {
-                "w_int": P(jnp.zeros((k, n), jnp.int8), (in_ax, out_ax)),
-                "w_scale": P(jnp.ones((1, n), jnp.float32), (None, out_ax)),
-            }
-            if spec.bias:
-                p["b"] = P(jnp.zeros((n,), jnp.float32), (out_ax,))
-            return p
-        p = {
-            "w": P(_uniform(kw, (k, n), pd, bound), (in_ax, out_ax)),
-            "amax": P(jnp.asarray(6.0, pd), ()),
-        }
-        if spec.bias:
-            p["b"] = P(jnp.zeros((n,), pd), (out_ax,))
-        return p
-
-    raise ValueError(f"unknown linear mode {spec.mode!r}")
+    be = _backend.get_backend(spec.mode)
+    if phase == "serve":
+        return be.init_serve(key, k, n, spec, axes=axes)
+    return be.init_train(key, k, n, spec, axes=axes)
 
 
-def _unpack_signs(packed: jax.Array, k: int) -> jax.Array:
-    """(..., K/8, N) uint8 bitplanes -> (..., K, N) +/-1 int8."""
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    bits = (packed[..., :, None, :] >> shifts[:, None]) & 1  # (..., K/8, 8, N)
-    bits = bits.reshape(packed.shape[:-2] + (k, packed.shape[-1]))
-    return (2 * bits.astype(jnp.int8) - 1).astype(jnp.int8)
-
-
-def pack_signs(s: jax.Array) -> jax.Array:
-    """(..., K, N) +/-1 -> (..., K/8, N) uint8 bitplanes (bit j = edge k%8==j)."""
-    k = s.shape[-2]
-    assert k % 8 == 0
-    bits = (s > 0).astype(jnp.uint8).reshape(s.shape[:-2] + (k // 8, 8, s.shape[-1]))
-    shifts = jnp.arange(8, dtype=jnp.uint8)
-    return jnp.sum(bits << shifts[:, None], axis=-2).astype(jnp.uint8)
-
-
-def _maybe_out_scale(y: jax.Array, mk: int, spec: LinearSpec) -> jax.Array:
-    if spec.out_scale == "rsqrt_k":
-        return y / jnp.sqrt(jnp.asarray(mk, y.dtype))
-    return y
-
-
-def linear_apply(params, x: jax.Array, spec: LinearSpec, *, phase: str = "train") -> jax.Array:
-    """x: (..., K) -> (..., N)."""
-    cd = spec.cdtype
-    x = x.astype(cd)
-
-    if spec.mode == "dense":
-        y = x @ params["w"].astype(cd)
-        if "b" in params:
-            y = y + params["b"].astype(cd)
-        return y
-
-    if spec.mode == "bika":
-        if phase == "serve":
-            tau, s = params["tau"], params["s"]
-            m, k = tau.shape[0], tau.shape[1]
-            if spec.pack_signs:
-                s = _unpack_signs(s, k)
-            # activation quantization onto the int8 threshold grid
-            x_int = jnp.clip(jnp.round(x / spec.act_scale), -128, 127).astype(jnp.int8)
-            if spec.impl == "cvjp_tiled":
-                hw_mm = lambda xi, t, ss: bika_core.bika_matmul_hw_tiled(xi, t, ss)
-            else:  # fused comparator fusion (TPU-ideal; Pallas = explicit form)
-                hw_mm = lambda xi, t, ss: bika_core.bika_matmul_hw(
-                    xi.astype(jnp.float32), t.astype(jnp.float32),
-                    ss.astype(jnp.float32), clamp=False, acc_dtype=jnp.float32
-                )
-            if spec.fold_m and m > 1:
-                # m-axis folding (DESIGN.md §2): one comparator contraction
-                # over K' = m*K; exact (integer ±s sums commute)
-                tau_f, s_f = bika_core.fold_m_axis(tau, s)
-                y = hw_mm(bika_core.tile_m_axis(x_int, m), tau_f, s_f).astype(cd)
-            else:
-                y = sum(hw_mm(x_int, tau[j], s[j]) for j in range(m)).astype(cd)
-            y = _maybe_out_scale(y, m * k, spec)
-            return y * params["gamma"].astype(cd)
-        w, beta = params["w"].astype(cd), params["beta"].astype(cd)
-        m, k = w.shape[0], w.shape[1]
-        if spec.impl == "cvjp":
-            mm = lambda xx, ww, bb: bika_core.bika_matmul_cvjp(xx, ww, bb)
-        elif spec.impl == "cvjp_tiled":
-            mm = lambda xx, ww, bb: bika_core.bika_matmul_cvjp(xx, ww, bb, tiled=True)
-        elif spec.impl == "pallas":
-            from repro.kernels.ops import cac_train_matmul
-
-            mm = lambda xx, ww, bb: cac_train_matmul(xx, ww, bb)
-        else:
-            # folded K' = m*K: default chunk to K so the scan's live
-            # intermediate stays at the per-m term size (see core/bika.py)
-            fold_chunk = spec.chunk if spec.chunk is not None else k
-            mm_chunk = fold_chunk if spec.fold_m and m > 1 else spec.chunk
-            mm = lambda xx, ww, bb: bika_core.bika_matmul(xx, ww, bb, chunk=mm_chunk)
-        if spec.fold_m and m > 1:
-            # one contraction over K' = m*K instead of an m-term Python sum;
-            # covers every impl incl. the XLA bika_matmul_cvjp fallback and
-            # the Pallas kernel route
-            wf, bf = bika_core.fold_m_axis(w, beta)
-            y = mm(bika_core.tile_m_axis(x, m), wf, bf)
-        else:
-            y = sum(mm(x, w[j], beta[j]) for j in range(m))
-        y = _maybe_out_scale(y, m * k, spec)
-        return y * params["gamma"].astype(cd)
-
-    if spec.mode == "bnn":
-        if phase == "serve":
-            wb = params["wb"]
-            k = wb.shape[0] * (8 if spec.pack_signs else 1)
-            if spec.pack_signs:
-                wb = _unpack_signs(wb, k)
-            xb = sign(x)
-            y = (xb @ wb.astype(cd)).astype(cd)
-        else:
-            k = params["w"].shape[0]
-            xb = sign_ste(x)
-            wb = sign_ste(params["w"].astype(cd))
-            y = xb @ wb
-        y = _maybe_out_scale(y, k, spec)
-        return y * params["gamma"].astype(cd)
-
-    if spec.mode == "qnn8":
-        if phase == "serve":
-            x_int = jnp.clip(jnp.round(x / spec.act_scale), -128, 127).astype(jnp.int8)
-            acc = jax.lax.dot(
-                x_int.reshape((-1, x_int.shape[-1])),
-                params["w_int"],
-                preferred_element_type=jnp.int32,
-            ).reshape(x.shape[:-1] + (params["w_int"].shape[-1],))
-            y = acc.astype(cd) * (params["w_scale"].astype(cd) * spec.act_scale)
-            if "b" in params:
-                y = y + params["b"].astype(cd)
-            return y
-        xq = qnn_core.fake_quant_activations(x, params["amax"].astype(cd))
-        wq = qnn_core.fake_quant_weights(params["w"].astype(cd))
-        y = xq @ wq
-        if "b" in params:
-            y = y + params["b"].astype(cd)
-        return y
-
-    raise ValueError(f"unknown linear mode {spec.mode!r}")
+def linear_apply(
+    params,
+    x: jax.Array,
+    spec: LinearSpec,
+    *,
+    phase: str = "train",
+    blocks: Optional[Dict[str, int]] = None,
+) -> jax.Array:
+    """x: (..., K) -> (..., N). ``blocks`` overrides kernel-route block sizes."""
+    be = _backend.get_backend(spec.mode)
+    x = x.astype(spec.cdtype)
+    if phase == "serve":
+        return be.apply_serve(params, x, spec, blocks=blocks)
+    return be.apply_train(params, x, spec, blocks=blocks)
 
 
 def linear_to_serve(params, spec: LinearSpec):
     """Convert trained float params to the hardware serve form."""
-    if spec.mode == "dense":
-        return dict(params)
-    if spec.mode == "bika":
-        tau, s = bika_core.to_hardware(params["w"], params["beta"])
-        tau_int, _ = bika_core.quantize_thresholds(tau, spec.act_scale)
-        s = s.astype(jnp.int8)
-        if spec.pack_signs:
-            s = pack_signs(s)
-        return {"tau": tau_int, "s": s, "gamma": params["gamma"].astype(jnp.float32)}
-    if spec.mode == "bnn":
-        wb = sign(params["w"]).astype(jnp.int8)
-        if spec.pack_signs:
-            wb = pack_signs(wb)
-        return {"wb": wb, "gamma": params["gamma"].astype(jnp.float32)}
-    if spec.mode == "qnn8":
-        w_int, w_scale = qnn_core.quantize_weights(params["w"])
-        out = {"w_int": w_int, "w_scale": w_scale.astype(jnp.float32)}
-        if "b" in params:
-            out["b"] = params["b"].astype(jnp.float32)
-        return out
-    raise ValueError(spec.mode)
+    return _backend.get_backend(spec.mode).to_serve(params, spec)

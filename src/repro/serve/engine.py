@@ -6,9 +6,16 @@ jitted prefill, then jitted single-token decode steps until every request in
 the batch has finished (EOS or max_new_tokens). The decode loop is the
 ``serve_step`` the decode_* / long_* dry-run cells lower.
 
-With ``phase='serve'`` the engine runs the hardware-form BiKA parameters
-(int8 thresholds + packed signs) — the TPU rendition of the paper's
-deployment story: serving weight traffic drops to ~9 bits/edge.
+With ``phase='serve'`` the engine runs hardware-form parameters — int8
+thresholds + packed signs for BiKA, packed sign bits for BNN, int8 weights +
+requant scales for QNN — the TPU rendition of the paper's deployment story:
+serving weight traffic drops to ~9 bits/edge (bika) or ~1 bit/edge (bnn).
+
+``ServeEngine.from_trained`` is the train->deploy step: it converts a trained
+float checkpoint through the QuantBackend registry (``core.convert.
+tree_to_serve``) and builds the serve-phase model around it, so ANY
+registered quantized mode (including future ones) deploys through the same
+two lines.
 """
 from __future__ import annotations
 
@@ -19,9 +26,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.convert import tree_to_serve
 from repro.models.base import ArchConfig, ModelAPI
 
-__all__ = ["Request", "ServeEngine", "serve_batch"]
+__all__ = ["Request", "ServeEngine", "serve_batch", "serve_params_from_train"]
+
+
+def serve_params_from_train(train_params, spec):
+    """Trained float params (any model tree) -> hardware serve form via the
+    backend registry. Thin serving-layer alias of ``convert.tree_to_serve``."""
+    return tree_to_serve(train_params, spec)
 
 
 @dataclasses.dataclass
@@ -55,6 +69,27 @@ class ServeEngine:
         )
         self._decode = jax.jit(api.decode_step, donate_argnums=(2,))
         self.queue: List[Request] = []
+
+    @classmethod
+    def from_trained(
+        cls,
+        train_params,
+        arch: ArchConfig,
+        *,
+        batch_size: int = 4,
+        max_len: int = 256,
+        quantized_kv: bool = False,
+    ) -> "ServeEngine":
+        """Build a serve-phase engine directly from a trained checkpoint:
+        converts every linear leaf through its registered backend's
+        ``to_serve`` and instantiates the ``phase='serve'`` model around the
+        result."""
+        from repro.models import build_model
+
+        api = build_model(arch, phase="serve")
+        params = serve_params_from_train(train_params, arch.linear_spec())
+        return cls(api, params, arch, batch_size=batch_size, max_len=max_len,
+                   quantized_kv=quantized_kv)
 
     def submit(self, req: Request):
         self.queue.append(req)

@@ -68,6 +68,14 @@ class Trainer:
         opt: Optional[OptimizerSpec] = None,
         fail_at_step: Optional[int] = None,
     ):
+        # Sharding-invariant RNG. The legacy threefry lowering generates
+        # different bits depending on the output sharding, so the
+        # jit(out_shardings=...)-generated params/batches below diverge
+        # between mesh shapes — 1-device vs N-device training would differ
+        # from step 0 (observed ~0.03 in first-step loss). Set before any
+        # trace so the elastic-restore and DPxTP-equivalence guarantees
+        # hold regardless of mesh shape.
+        jax.config.update("jax_threefry_partitionable", True)
         self.cfg = cfg
         self.rules = rules
         self.fail_at_step = fail_at_step

@@ -1,0 +1,276 @@
+"""QuantBackend registry tests (DESIGN.md §3): the shared backend contract,
+interpret-mode parity for the lifted BNN/QNN Pallas routes vs kernels/ref.py,
+the BNN SignSTE custom-VJP backward, and whole-tree serve conversion.
+
+STE boundary note (as in test_kernels.py): gradient comparisons exclude the
+measure-zero |x| = 1 / |w| = 1 hard-tanh boundary elements, which flip under
+fp reassociation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core.backend import get_backend, pack_signs, registered_backends
+from repro.core.convert import tree_to_serve
+from repro.core.ste import sign_ste
+from repro.kernels import autotune, ops, ref
+from repro.nn.linear import LinearSpec, linear_apply, linear_init, linear_to_serve
+from repro.nn.module import unbox
+
+KEY = jax.random.PRNGKey(0)
+MODES = ["dense", "bika", "bnn", "qnn8"]
+# K % 8 == 0 everywhere so the packed serve forms are exercised too
+SHAPE_GRID = [(4, 16, 8), (7, 40, 24), (3, 64, 16)]
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_contains_all_modes():
+    regs = registered_backends()
+    assert set(MODES) <= set(regs)
+    for name, be in regs.items():
+        assert be.name == name
+
+
+def test_unknown_mode_raises_with_known_names():
+    with pytest.raises(ValueError, match="bika"):
+        get_backend("ternary-nope")
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("m,k,n", SHAPE_GRID)
+def test_roundtrip_init_to_serve_apply_serve(mode, m, k, n):
+    """Every registered backend round-trips init_train -> to_serve ->
+    apply_serve on a shared shape grid, and the converted tree matches the
+    serve-phase init structurally (same keys, shapes, dtypes)."""
+    spec = LinearSpec(mode=mode)
+    p = unbox(linear_init(KEY, k, n, spec, axes=(None, None)))
+    sp = linear_to_serve(p, spec)
+    ref_sp = unbox(
+        jax.eval_shape(
+            lambda kk: linear_init(kk, k, n, spec, axes=(None, None), phase="serve"),
+            KEY,
+        )
+    )
+    assert set(sp) == set(ref_sp)
+    for key_ in sp:
+        assert sp[key_].shape == ref_sp[key_].shape, key_
+        assert sp[key_].dtype == ref_sp[key_].dtype, key_
+    x = jax.random.normal(jax.random.PRNGKey(m), (m, k))
+    ys = linear_apply(sp, x, spec, phase="serve")
+    assert ys.shape == (m, n)
+    assert np.isfinite(np.asarray(ys)).all()
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_kernel_route_names_resolve(mode):
+    """Declared kernel routes exist in ops.KERNEL_ROUTES and autotune paths
+    in the heuristic table; autotune_key matches the cache-key form."""
+    be = get_backend(mode)
+    for phase in ("train", "serve"):
+        for packed in (False, True):
+            spec = LinearSpec(mode=mode, impl="pallas", pack_signs=packed)
+            route = be.kernel_route(spec, phase)
+            if route is not None:
+                ops.kernel_route(route)  # raises on a miss
+            path = be.autotune_path(spec, phase)
+            if path is not None:
+                assert path in autotune._BASE
+                key = be.autotune_key(spec, phase, 8, 64, 16)
+                assert key == autotune.cache_key(path, 8, 64, 16)
+    with pytest.raises(KeyError, match="known"):
+        ops.kernel_route("definitely-not-a-route")
+
+
+def test_backend_mode_conventions():
+    """bias/between-layer-activation conventions live on the backend (the
+    ladders models/paper.py used to hard-code)."""
+    x = jnp.asarray([-2.0, 3.0])
+    for mode in ("dense", "qnn8"):
+        assert get_backend(mode).default_bias
+        np.testing.assert_array_equal(
+            np.asarray(get_backend(mode).inter_act(x)), [0.0, 3.0]
+        )
+    for mode in ("bika", "bnn"):
+        assert not get_backend(mode).default_bias
+        np.testing.assert_array_equal(np.asarray(get_backend(mode).inter_act(x)),
+                                      np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Lifted BNN/QNN Pallas routes: interpret-mode parity vs kernels/ref.py
+# ---------------------------------------------------------------------------
+
+
+def _bnn_case(m, k, n, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], (m, k))
+    w = jax.random.normal(ks[1], (k, n)) * 0.5
+    g = jax.random.normal(ks[2], (m, n))
+    return x, w, g
+
+
+BNN_SHAPES = [(8, 16, 8), (33, 100, 17), (64, 512, 128), (5, 40, 24)]
+
+
+@pytest.mark.parametrize("m,k,n", BNN_SHAPES)
+def test_bnn_train_fwd_matches_ref(m, k, n):
+    x, w, _ = _bnn_case(m, k, n, seed=m)
+    np.testing.assert_allclose(
+        ops.bnn_train_matmul(x, w), ref.bnn_matmul_ref(x, w), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,k,n", BNN_SHAPES)
+def test_bnn_ste_bwd_matches_xla(m, k, n):
+    """The Pallas SignSTE backward pair == XLA sign_ste(x) @ sign_ste(w)
+    gradients (off the |x| = 1 / |w| = 1 hard-tanh boundary)."""
+    x, w, g = _bnn_case(m, k, n, seed=m + 1)
+    dxp, dwp = jax.vjp(ops.bnn_train_matmul, x, w)[1](g)
+    dxr, dwr = jax.vjp(lambda a, b: sign_ste(a) @ sign_ste(b), x, w)[1](g)
+    okx = np.abs(np.abs(np.asarray(x)) - 1.0) > 1e-4
+    okw = np.abs(np.abs(np.asarray(w)) - 1.0) > 1e-4
+    np.testing.assert_allclose(np.where(okx, dxp, 0), np.where(okx, dxr, 0),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.where(okw, dwp, 0), np.where(okw, dwr, 0),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_bnn_train_batch_dims_and_blocks():
+    x = jax.random.normal(KEY, (3, 5, 32))
+    w = jax.random.normal(jax.random.PRNGKey(1), (32, 16)) * 0.4
+    y = ops.bnn_train_matmul(x, w)
+    assert y.shape == (3, 5, 16)
+    ov = dict(block_m=8, block_n=128, block_k=16, block_k_sub=8)
+    np.testing.assert_allclose(ops.bnn_train_matmul(x, w, **ov), y, atol=1e-5)
+    dx = jax.vjp(lambda *a: ops.bnn_train_matmul(*a, **ov), x, w)[1](
+        jnp.ones_like(y))[0]
+    dxd = jax.vjp(ops.bnn_train_matmul, x, w)[1](jnp.ones_like(y))[0]
+    np.testing.assert_allclose(dx, dxd, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("m,k,n", [(8, 16, 8), (33, 104, 17), (64, 512, 128)])
+def test_bnn_packed_matches_unpacked(m, k, n):
+    """The packed-bitplane serve kernel == unpacked route == ref, including
+    ragged shapes whose K pads in byte units."""
+    x, w, _ = _bnn_case(m, k, n, seed=m + 2)
+    wb = jnp.where(w >= 0, 1, -1).astype(jnp.int8)
+    yp = ops.bnn_matmul_packed(x, pack_signs(wb))
+    np.testing.assert_allclose(yp, ref.bnn_matmul_ref(x, w), atol=1e-5)
+    np.testing.assert_allclose(yp, ops.bnn_matmul(x, w), atol=1e-5)
+
+
+def test_qnn_kernel_blocks_override_and_parity():
+    ks = jax.random.split(KEY, 3)
+    xi = jax.random.randint(ks[0], (19, 72), -128, 127, dtype=jnp.int8)
+    wi = jax.random.randint(ks[1], (72, 33), -128, 127, dtype=jnp.int8)
+    ws = jax.random.uniform(ks[2], (1, 33))
+    y = ops.qnn_matmul(xi, wi, ws, 0.05)
+    np.testing.assert_allclose(y, ref.qnn_matmul_ref(xi, wi, 0.05, ws), rtol=1e-5)
+    ov = dict(block_m=8, block_n=128, block_k=24, block_k_sub=8)
+    np.testing.assert_allclose(ops.qnn_matmul(xi, wi, ws, 0.05, **ov), y,
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", ["bnn", "qnn8"])
+def test_linear_pallas_impl_matches_xla(mode):
+    """linear_apply(spec.impl='pallas') == the XLA route, train and serve
+    (the registry's kernel_route dispatch end-to-end)."""
+    spec = LinearSpec(mode=mode)
+    spec_p = dataclasses.replace(spec, impl="pallas")
+    p = unbox(linear_init(KEY, 32, 16, spec, axes=(None, None)))
+    x = jax.random.normal(jax.random.PRNGKey(5), (6, 32))
+    np.testing.assert_allclose(np.asarray(linear_apply(p, x, spec)),
+                               np.asarray(linear_apply(p, x, spec_p)),
+                               atol=1e-5)
+    sp = linear_to_serve(p, spec)
+    np.testing.assert_allclose(
+        np.asarray(linear_apply(sp, x, spec, phase="serve")),
+        np.asarray(linear_apply(sp, x, spec_p, phase="serve")),
+        atol=1e-5,
+    )
+
+
+def test_autotune_measured_covers_baseline_paths(tmp_path, monkeypatch):
+    """The measured-search runners accept the new bnn_bwd / qnn8 paths and
+    persist winners in the JSON cache under those path keys."""
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    autotune.clear_cache()
+    try:
+        for path in ("bnn", "bnn_bwd", "qnn8"):
+            bl = autotune.measured_blocks(
+                path, 16, 32, 16,
+                candidates=[dict(block_m=16, block_n=128, block_k=32)],
+                iters=1, warmup=0, interpret=True,
+            )
+            assert {"block_m", "block_n", "block_k"} <= set(bl)
+        import json
+
+        keys = set(json.loads(cache.read_text()))
+        assert {autotune.cache_key(p, 16, 32, 16)
+                for p in ("bnn", "bnn_bwd", "qnn8")} <= keys
+    finally:
+        autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Whole-tree serve conversion (the registry threaded through convert/serve)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_paper_model_tree_to_serve(mode):
+    from repro.models.paper import TFC, build_paper_model, paper_model_to_serve
+
+    cfg = TFC.replace(mode=mode)
+    init, _ = build_paper_model(cfg)
+    params = unbox(init(KEY))
+    sp = paper_model_to_serve(params, cfg)
+    _, apply_s = build_paper_model(cfg, phase="serve")
+    x = jax.random.normal(KEY, (2, cfg.in_dim))
+    logits = apply_s(sp, x)
+    assert logits.shape == (2, cfg.features[-1])
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_tree_to_serve_stacked_layers():
+    """Stacked (L, ...) linear leaves (stack_layers trees) convert in one
+    shot and match per-layer conversion."""
+    spec = LinearSpec(mode="bika")
+    ps = [unbox(linear_init(jax.random.PRNGKey(i), 16, 8, spec,
+                            axes=(None, None))) for i in range(3)]
+    stacked = jax.tree_util.tree_map(lambda *a: jnp.stack(a), *ps)
+    sv = tree_to_serve(stacked, spec)
+    for i, p in enumerate(ps):
+        svi = tree_to_serve(p, spec)
+        for key_ in svi:
+            np.testing.assert_array_equal(np.asarray(sv[key_][i]),
+                                          np.asarray(svi[key_]))
+
+
+def test_serve_engine_from_trained_smoke():
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.serve.engine import Request, ServeEngine
+
+    cfg = get_smoke("smollm-360m", compute_mode="bika", remat=False)
+    cfg = cfg.replace(pack_signs=True)
+    api = build_model(cfg, phase="train")
+    tp = unbox(api.init(KEY))
+    eng = ServeEngine.from_trained(tp, cfg, batch_size=2, max_len=24)
+    rng = np.random.RandomState(0)
+    for i in range(3):
+        eng.submit(Request(rid=i,
+                           prompt=rng.randint(0, cfg.vocab, 4).astype(np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(r.output is not None and len(r.output) >= 1 for r in done)

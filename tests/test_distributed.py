@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 from jax.sharding import Mesh, PartitionSpec
 
+from repro.distributed.meshes import abstract_mesh
 from repro.distributed.sharding import (
     FSDP_RULES,
     LOGICAL_RULES,
@@ -26,8 +27,9 @@ def _mesh11():
 
 
 def _fake_mesh(shape, axes):
-    """Abstract mesh for spec-level tests (no devices needed)."""
-    return jax.sharding.AbstractMesh(shape, axes)
+    """Abstract mesh for spec-level tests (no devices needed); the
+    version-portable constructor lives in distributed.meshes."""
+    return abstract_mesh(shape, axes)
 
 
 def test_logical_rules_basic():

@@ -36,6 +36,17 @@ def _nonboundary_mask(x, w, beta, eps=1e-4):
     return jnp.abs(jnp.abs(pre) - 1.0) > eps
 
 
+def _sign_nonboundary_out_mask(x, w, beta, eps=1e-6):
+    """Sign(0) boundary tolerance: when x*w + beta lands within float-eps of
+    0, an FMA contraction (jit) and the separate mul+add (eager ref) can
+    round to opposite signs, flipping Sign by 2 — a genuinely order-dependent
+    measure-zero set (~1 element in 1e6 at 300x1000x70). Returns the (m, n)
+    outputs whose K-reduction contains no such element; comparisons exclude
+    the rest (same convention as the |pre| = 1 STE mask above)."""
+    pre = x[:, :, None] * w[None] + beta[None]
+    return (jnp.abs(pre) > eps).all(axis=1)
+
+
 SHAPES = [(8, 16, 8), (33, 100, 17), (64, 512, 128), (128, 384, 256), (300, 1000, 70)]
 
 
@@ -73,7 +84,10 @@ def test_cac_hw_kernel_int8_grid():
 def test_cac_train_fwd_matches_ref(m, k, n):
     x, _, _, w, beta, _ = _case(m, k, n, seed=m + 1)
     y = ops.cac_train_matmul(x, w, beta)
-    np.testing.assert_allclose(y, ref.cac_train_fwd_ref(x, w, beta), atol=1e-5)
+    yr = ref.cac_train_fwd_ref(x, w, beta)
+    ok = np.asarray(_sign_nonboundary_out_mask(x, w, beta))
+    assert ok.mean() > 0.99, f"boundary mask excludes too much ({ok.mean():.3f})"
+    np.testing.assert_allclose(np.where(ok, y, 0), np.where(ok, yr, 0), atol=1e-5)
 
 
 @pytest.mark.parametrize("m,k,n", SHAPES[:4])
