@@ -1,0 +1,222 @@
+"""Serving load test: Poisson-arrival mixed-length traffic, static vs
+continuous engines, across the quantized backends.
+
+    PYTHONPATH=src:. python benchmarks/serving_bench.py --smoke
+    PYTHONPATH=src:. python benchmarks/serving_bench.py \
+        --modes dense,bika,bnn,qnn8 --requests 32 --out BENCH_serving.json
+
+Both engines replay the SAME open-loop arrival trace (exponential
+inter-arrival gaps, mixed prompt lengths, mixed token budgets) and are
+measured through their streaming ``on_token`` callbacks, so TTFT/TPOT mean
+the same thing for both. Goodput = completed output tokens / makespan.
+
+The static engine loses on exactly the two axes this subsystem attacks:
+head-of-line blocking (every packed group decodes until its LAST request
+finishes, and nothing new is admitted meanwhile) and per-shape prefill
+recompiles (one program per distinct packed prompt width vs. the continuous
+engine's power-of-two bucket cache).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.nn.module import unbox
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.metrics import _percentile
+from repro.serve.scheduler import replay_arrivals
+
+MODES = ("dense", "bika", "bnn", "qnn8")
+
+
+def make_workload(rng: np.random.RandomState, n: int, vocab: int, *,
+                  arrival_rate: float, plen_range: Tuple[int, int],
+                  ntok_range: Tuple[int, int]) -> List[Tuple[float, Request]]:
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+    out = []
+    for i in range(n):
+        plen = int(rng.randint(plen_range[0], plen_range[1] + 1))
+        ntok = int(rng.randint(ntok_range[0], ntok_range[1] + 1))
+        prompt = rng.randint(0, vocab, plen).astype(np.int32)
+        out.append((float(arrivals[i]), Request(rid=i, prompt=prompt, max_new_tokens=ntok)))
+    return out
+
+
+class _Tap:
+    """Per-request streaming tap: stamps first/last token wall times."""
+
+    def __init__(self):
+        self.t_submit: Dict[int, float] = {}
+        self.t_first: Dict[int, float] = {}
+        self.t_last: Dict[int, float] = {}
+        self.n_tok: Dict[int, int] = {}
+
+    def attach(self, req: Request) -> None:
+        rid = req.rid
+
+        def on_token(tok: int, _rid=rid) -> None:
+            now = time.monotonic()
+            self.t_first.setdefault(_rid, now)
+            self.t_last[_rid] = now
+            self.n_tok[_rid] = self.n_tok.get(_rid, 0) + 1
+
+        req.on_token = on_token
+
+    def summary(self, makespan: float) -> Dict:
+        ttfts = sorted(self.t_first[r] - self.t_submit[r] for r in self.t_first)
+        tpots = sorted(
+            (self.t_last[r] - self.t_first[r]) / (self.n_tok[r] - 1)
+            for r in self.t_first if self.n_tok.get(r, 0) > 1
+        )
+        total = sum(self.n_tok.values())
+        return {
+            "completed_requests": len(self.t_last),
+            "completed_tokens": total,
+            "makespan_s": makespan,
+            "goodput_tok_s": total / makespan if makespan > 0 else 0.0,
+            "ttft_mean_s": float(np.mean(ttfts)) if ttfts else None,
+            "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
+            "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,
+            "tpot_mean_s": float(np.mean(tpots)) if tpots else None,
+        }
+
+
+def _warmup(eng: ServeEngine, vocab: int) -> None:
+    """One throwaway request to pre-compile prefill+decode, so the timed run
+    compares scheduling, not cold-start XLA compiles."""
+    eng.submit(Request(rid=-1, prompt=np.arange(1, 4, dtype=np.int32) % vocab,
+                       max_new_tokens=2))
+    eng.run()
+
+
+def run_static(api, params, arch, workload, *, batch_size: int, max_len: int,
+               warmup: bool) -> Dict:
+    eng = ServeEngine(api, params, arch, batch_size=batch_size, max_len=max_len,
+                      engine="static")
+    if warmup:
+        _warmup(eng, arch.vocab)
+    tap = _Tap()
+    pending = [(t, r) for t, r in workload]
+    shapes = set()
+    t0 = time.monotonic()
+    while pending or eng.queue:
+        now = time.monotonic() - t0
+        while pending and pending[0][0] <= now:
+            t_arr, req = pending.pop(0)
+            tap.t_submit[req.rid] = t0 + t_arr
+            tap.attach(req)
+            eng.submit(req)
+        if eng.queue:
+            group, eng.queue = eng.queue[:batch_size], eng.queue[batch_size:]
+            shapes.add((len(group), max(len(r.prompt) for r in group)))
+            eng.step_batch(group)
+        elif pending:
+            time.sleep(max(0.0, pending[0][0] - now))
+    makespan = time.monotonic() - t0
+    out = tap.summary(makespan)
+    out["distinct_prefill_shapes"] = len(shapes)
+    return out
+
+
+def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
+                   warmup: bool) -> Dict:
+    eng = ServeEngine(api, params, arch, max_len=max_len, engine="continuous",
+                      n_slots=n_slots)
+    sched = eng.scheduler
+    if warmup:
+        _warmup(eng, arch.vocab)
+        sched.reset_metrics()
+    base_misses = sched.prefill.misses  # exclude warmup's compile from the report
+    tap = _Tap()
+
+    def submit(req, t_abs):
+        tap.t_submit[req.rid] = t_abs
+        tap.attach(req)
+        eng.submit(req)
+
+    _, makespan = replay_arrivals(sched, workload, submit=submit)
+    out = tap.summary(makespan)
+    out["slot_occupancy"] = sched.metrics.slot_occupancy
+    out["prefill_compiles"] = sched.prefill.misses - base_misses
+    out["decode_steps"] = sched.metrics.decode_steps
+    return out
+
+
+def bench_mode(mode: str, args) -> Dict:
+    arch = get_smoke(args.arch, compute_mode=mode, remat=False)
+    if mode == "bika":
+        arch = arch.replace(pack_signs=True)
+    api = build_model(arch, phase="serve")
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+    mk = lambda: make_workload(  # identical trace for both engines
+        np.random.RandomState(args.seed), args.requests, arch.vocab,
+        arrival_rate=args.arrival_rate,
+        plen_range=(args.min_prompt, args.max_prompt),
+        ntok_range=(args.min_new, args.max_new),
+    )
+    static = run_static(api, params, arch, mk(), batch_size=args.batch_size,
+                        max_len=args.max_len, warmup=not args.no_warmup)
+    cont = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
+                          max_len=args.max_len, warmup=not args.no_warmup)
+    ratio = (cont["goodput_tok_s"] / static["goodput_tok_s"]
+             if static["goodput_tok_s"] else None)
+    print(f"[{mode}] static {static['goodput_tok_s']:.1f} tok/s | continuous "
+          f"{cont['goodput_tok_s']:.1f} tok/s | ratio {ratio:.2f}x | "
+          f"occupancy {cont['slot_occupancy']:.2f} | prefill compiles "
+          f"{cont['prefill_compiles']} vs {static['distinct_prefill_shapes']} shapes")
+    return {"static": static, "continuous": cont, "goodput_ratio": ratio}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--modes", default="dense,bika,bnn,qnn8")
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--arrival-rate", type=float, default=16.0)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--min-prompt", type=int, default=3)
+    ap.add_argument("--max-prompt", type=int, default=24)
+    ap.add_argument("--min-new", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="capped run for CI: bika only, 8 requests")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.modes, args.requests, args.max_new = "bika", 8, 12
+
+    results = {m: bench_mode(m, args) for m in args.modes.split(",")}
+    payload = {
+        "bench": "serving",
+        "arch": args.arch,
+        "workload": {
+            "requests": args.requests,
+            "arrival_rate_req_s": args.arrival_rate,
+            "prompt_len": [args.min_prompt, args.max_prompt],
+            "max_new_tokens": [args.min_new, args.max_new],
+            "seed": args.seed,
+        },
+        "engines": {"static": {"batch_size": args.batch_size},
+                    "continuous": {"n_slots": args.n_slots}},
+        "max_len": args.max_len,
+        "results": results,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

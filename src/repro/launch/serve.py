@@ -1,8 +1,13 @@
 """Serving launcher CLI: bring up a hardware-form (serve-phase) model and
-drain a synthetic request stream.
+drain a synthetic request stream through either engine.
 
     PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --smoke \
-        --requests 8 --new-tokens 16
+        --requests 8 --new-tokens 16 --engine continuous
+
+``--arrival-rate R`` (req/s, continuous engine) replays a Poisson arrival
+process instead of submitting everything up front: the launcher ticks the
+slot scheduler and admits each request when its arrival time elapses —
+the same open-loop load shape as benchmarks/serving_bench.py.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ from repro.configs import ARCH_NAMES, get_config, get_smoke
 from repro.models import build_model
 from repro.nn.module import param_bytes, unbox
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import replay_arrivals
 
 
 def main(argv=None) -> int:
@@ -27,6 +33,11 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--quantized-kv", action="store_true")
+    ap.add_argument("--engine", default="auto", choices=("auto", "static", "continuous"))
+    ap.add_argument("--n-slots", type=int, default=0,
+                    help="continuous decode slots (0 -> batch-size)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrival rate in req/s (0 = submit all up front)")
     args = ap.parse_args(argv)
 
     getter = get_smoke if args.smoke else get_config
@@ -38,21 +49,41 @@ def main(argv=None) -> int:
     print(f"[serve] {arch.name} mode={args.mode} params={param_bytes(params):,} B")
 
     eng = ServeEngine(api, params, arch, batch_size=args.batch_size,
-                      max_len=args.max_len, quantized_kv=args.quantized_kv)
+                      max_len=args.max_len, quantized_kv=args.quantized_kv,
+                      engine=args.engine, n_slots=args.n_slots or None)
+    print(f"[serve] engine={eng.engine}")
     rng = np.random.RandomState(0)
     extra = None
     if arch.family == "encdec":
+        # sized to the engine's packed batch ceiling; the engine trims it to
+        # each packed group (incl. the final partial batch)
         extra = {"frames": 0.1 * jax.random.normal(
             jax.random.PRNGKey(1),
             (args.batch_size, 16, arch.d_model))}
+    reqs = []
     for i in range(args.requests):
         plen = int(rng.randint(3, 12))
-        eng.submit(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
-                           .astype(np.int32), max_new_tokens=args.new_tokens))
-    done = eng.run(extra_batch=extra)
+        reqs.append(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
+                            .astype(np.int32), max_new_tokens=args.new_tokens))
+
+    if args.arrival_rate > 0 and eng.engine != "continuous":
+        print("[serve] WARNING: --arrival-rate needs the continuous engine; "
+              f"engine={eng.engine} drains the queue closed-loop instead")
+    if args.arrival_rate > 0 and eng.engine == "continuous":
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
+        done, _ = replay_arrivals(eng.scheduler, list(zip(arrivals, reqs)))
+    else:
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run(extra_batch=extra)
     for r in sorted(done, key=lambda q: q.rid)[:4]:
         print(f"  req {r.rid}: {list(r.output)[:10]}...")
     print(f"[serve] completed {len(done)} requests")
+    if eng.metrics is not None:
+        m = eng.metrics.summary()
+        print(f"[serve] goodput={m['goodput_tok_s']:.1f} tok/s "
+              f"occupancy={m['slot_occupancy']:.2f} "
+              f"prefill compiles={m['prefill_compiles']}")
     return 0
 
 

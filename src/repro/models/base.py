@@ -15,12 +15,52 @@ from repro.nn.module import P, unbox
 
 __all__ = [
     "ArchConfig",
+    "KVCacheLayout",
     "ModelAPI",
+    "kv_cache_layout",
     "stack_layers",
     "scan_blocks",
     "scan_blocks_aux",
     "scan_blocks_with_cache",
 ]
+
+
+class KVCacheLayout(NamedTuple):
+    """Layout contract between ``init_cache``/``prefill``/``decode_step`` and
+    the serving runtime (serve/kv.py): every KV leaf is stacked as
+    ``(n_layers, n_slots, max_len, n_kv_heads, head_dim)`` (scale leaves carry
+    a trailing 1 instead of head_dim). The batch axis IS the slot axis — the
+    continuous scheduler allocates rows of it to requests and frees them the
+    moment a request finishes.
+    """
+
+    n_layers: int
+    n_slots: int
+    max_len: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def kv_cache_layout(cache) -> KVCacheLayout:
+    """Read the (layers, slots, max_len, heads, hd) layout off a stacked KV
+    cache pytree (the ``{"k", "v", ...}`` dict produced by ``init_cache``).
+    Raises if the tree does not follow the contract above."""
+    leaves = jax.tree_util.tree_leaves(cache)
+    if not leaves:
+        raise ValueError("empty cache pytree")
+    lead = None
+    for leaf in leaves:
+        if leaf.ndim != 5:
+            raise ValueError(
+                f"KV cache leaves must be rank-5 (layers, slots, max_len, heads, hd); "
+                f"got shape {leaf.shape}"
+            )
+        if lead is None:
+            lead = leaf.shape[:4]
+        elif leaf.shape[:4] != lead:
+            raise ValueError(f"inconsistent cache leaves: {leaf.shape[:4]} vs {lead}")
+    k = cache["k"] if isinstance(cache, dict) and "k" in cache else leaves[0]
+    return KVCacheLayout(*k.shape)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -176,8 +176,16 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
         x = norm_apply(params["ln_f"], x)
         return embedding.unembed_apply(params["embed"], x), new_cache
 
-    def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False):
-        """Prompt pass: (last-token logits (B,1,V), stacked KV cache)."""
+    def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False,
+                last_index=None):
+        """Prompt pass: (last-token logits (B,1,V), stacked KV cache).
+
+        ``last_index`` (optional, (B,) int32) selects which position's logits
+        to return per row instead of the literal last column — the bucketed
+        serving path right-pads prompts to a shape bucket, so the last *real*
+        token sits at ``prompt_len - 1``, not at ``-1``. Causality makes the
+        selected logits bit-identical to an unpadded prefill.
+        """
         tokens = batch["tokens"]
         ml = max_len or tokens.shape[1]
         x = embedding.embed_apply(params["embed"], tokens, cdtype)
@@ -188,7 +196,12 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
 
         x, caches = jax.lax.scan(step, x, params["layers"])
         _, norm_apply = make_norm(cfg)
-        x = norm_apply(params["ln_f"], x[:, -1:])
+        if last_index is None:
+            x = x[:, -1:]
+        else:
+            idx = jnp.asarray(last_index, jnp.int32).reshape(-1)[:, None, None]
+            x = jnp.take_along_axis(x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+        x = norm_apply(params["ln_f"], x)
         return embedding.unembed_apply(params["embed"], x), caches
 
     return ModelAPI(

@@ -122,23 +122,27 @@ def dot_attention(
     window: Optional[int] = None,
     kv_valid_len: Optional[jax.Array] = None,
 ) -> jax.Array:
-    """Unblocked GQA attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D)."""
+    """Unblocked GQA attention. q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D).
+
+    ``q_positions`` / ``kv_positions`` are (Sq,) / (Skv,) when positions are
+    shared across the batch, or (B,Sq) / (B,Skv) for per-row positions (the
+    continuous-batching decode path, where every slot sits at its own step).
+    """
     b, sq, hq, d = q.shape
     hkv = k.shape[2]
     g = hq // hkv
     qg = q.reshape(b, sq, hkv, g, d)
     scores = _gqa_scores(qg, k) / jnp.sqrt(jnp.asarray(d, jnp.float32))
-    mask = jnp.ones((sq, k.shape[1]), bool)
-    qp = q_positions[:, None]
-    kp = kv_positions[None, :]
-    mask &= kp >= 0  # ring-buffer slots not yet written recover negative positions
+    qp = q_positions if q_positions.ndim == 2 else q_positions[None]  # (1|B, Sq)
+    kp = kv_positions if kv_positions.ndim == 2 else kv_positions[None]  # (1|B, Skv)
+    mask = kp[:, None, :] >= 0  # ring slots not yet written recover negative positions
     if causal:
-        mask &= kp <= qp
+        mask = mask & (kp[:, None, :] <= qp[:, :, None])
     if window is not None:
-        mask &= kp > qp - window
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        mask = mask & (kp[:, None, :] > qp[:, :, None] - window)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
     if kv_valid_len is not None:
-        valid = kv_positions[None, :] < kv_valid_len[:, None]  # (B, Skv)
+        valid = kp < kv_valid_len[:, None]  # (B, Skv)
         scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = _gqa_out(p, v)
@@ -317,7 +321,9 @@ def attn_decode_step(
     *,
     phase: str = "serve",
 ):
-    """One-token decode. x: (B, 1, D); position: scalar int32 (same for batch).
+    """One-token decode. x: (B, 1, D); position: scalar int32 (same for the
+    whole batch) or (B,) int32 (per-row positions — the continuous-batching
+    slot path, where each batch row is an independent request).
 
     Full cache: write at index ``position``.  SWA: ring buffer of size
     ``window`` written at ``position % window``; positions are recovered from
@@ -329,29 +335,44 @@ def attn_decode_step(
     k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
     v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
     q = constrain(q, ("batch", "seq", "heads", None))
-    pos = jnp.full((1,), position, jnp.int32)
+    position = jnp.asarray(position, jnp.int32)
+    per_row = position.ndim == 1
+    cache_len = cache["k"].shape[1]
+    quantized = "k_scale" in cache
+
+    if per_row:
+        pos = position[:, None]  # (B, 1): per-row RoPE / mask positions
+    else:
+        pos = jnp.full((1,), position, jnp.int32)
     q = apply_rope(q, pos, cfg.rope_theta)
     k = apply_rope(k, pos, cfg.rope_theta)
 
-    cache_len = cache["k"].shape[1]
     slot = position % cache_len if cfg.window is not None else position
-    quantized = "k_scale" in cache
+
+    if per_row:
+        rows = jnp.arange(b)
+
+        def write(buf, upd):  # upd: (B, 1, H, D|1) scattered at per-row slots
+            return buf.at[rows, slot].set(upd[:, 0].astype(buf.dtype))
+
+    else:
+
+        def write(buf, upd):
+            return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype), (0, slot, 0, 0))
+
     if quantized:
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         new_cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0)),
-            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0, 0)),
-            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0, 0)),
+            "k": write(cache["k"], kq),
+            "v": write(cache["v"], vq),
+            "k_scale": write(cache["k_scale"], ks),
+            "v_scale": write(cache["v_scale"], vs),
         }
         k_all = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
         v_all = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
     else:
-        new_cache = {
-            "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0)),
-            "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0)),
-        }
+        new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
         k_all = new_cache["k"].astype(x.dtype)
         v_all = new_cache["v"].astype(x.dtype)
 
@@ -359,12 +380,19 @@ def attn_decode_step(
     if cfg.window is not None:
         # slot s holds token position p - ((p - s) mod L), the most recent
         # position congruent to s (ring buffer; L == min(window, max_len)).
-        kv_positions = position - jnp.mod(position - slots, cache_len)
+        # Per-row positions broadcast to a (B, L) position map.
+        kv_positions = (
+            position[:, None] - jnp.mod(position[:, None] - slots[None], cache_len)
+            if per_row
+            else position - jnp.mod(position - slots, cache_len)
+        )
         # unwritten slots recover negative positions and are masked in dot_attention
         valid_len = None
     else:
         kv_positions = slots
-        valid_len = jnp.full((b,), position + 1, jnp.int32)
+        valid_len = (
+            position + 1 if per_row else jnp.full((b,), position + 1, jnp.int32)
+        )
 
     out = dot_attention(
         q,

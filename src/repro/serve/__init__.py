@@ -1,4 +1,22 @@
-"""repro.serve — batched serving engine (prefill + decode w/ KV cache)."""
-from .engine import Request, ServeEngine, serve_batch
+"""repro.serve — serving runtime: continuous-batching slot scheduler,
+bucketed compile cache, KV slot manager, metrics, and the engine facade."""
+from .compile_cache import BucketedPrefill, bucket_for
+from .engine import Request, ServeEngine, serve_batch, serve_params_from_train
+from .kv import KVSlotManager
+from .metrics import RequestMetrics, RunMetrics
+from .scheduler import SlotScheduler, replay_arrivals, scheduler_supports
 
-__all__ = ["ServeEngine", "Request", "serve_batch"]
+__all__ = [
+    "BucketedPrefill",
+    "KVSlotManager",
+    "Request",
+    "RequestMetrics",
+    "RunMetrics",
+    "ServeEngine",
+    "SlotScheduler",
+    "bucket_for",
+    "replay_arrivals",
+    "scheduler_supports",
+    "serve_batch",
+    "serve_params_from_train",
+]

@@ -1,0 +1,97 @@
+"""Shape-bucketed prefill with a per-(bucket, batch) jit cache.
+
+A heavy-traffic stream has ~as many distinct prompt lengths as requests; a
+naive ``jit(prefill)`` recompiles for every one of them. Here prompts are
+right-padded to power-of-two length buckets, so the whole stream compiles
+``O(log2(max_len))`` programs and then only ever hits the cache.
+
+Right-padding (not the static engine's left-padding) is what keeps bucketing
+*exact*: with causal attention the pad tokens sit strictly in the future of
+every real token, so the real prefix's activations — and the KV rows
+``[0, prompt_len)`` — are bit-identical to an unpadded prefill. The logits
+for the last real token are picked out with ``prefill(..., last_index=
+prompt_len - 1)``; pad rows of the emitted cache are never attended because
+decode masks KV positions ``>= valid_len`` per row.
+
+The emitted cache is padded to the pool's full ``max_len`` (leaves
+``(L, 1, max_len, ...)``), so the slot splice in serve/kv.py has a single
+shape regardless of bucket.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["BucketedPrefill", "bucket_for"]
+
+
+def bucket_for(prompt_len: int, max_len: int, *, min_bucket: int = 16) -> int:
+    """Smallest power-of-two >= prompt_len (floored at min_bucket, capped at
+    max_len — the terminal bucket is max_len itself, pow2 or not)."""
+    if prompt_len > max_len:
+        raise ValueError(f"prompt_len {prompt_len} exceeds max_len {max_len}")
+    b = max(min_bucket, 1 << max(prompt_len - 1, 0).bit_length())
+    return min(b, max_len)
+
+
+class BucketedPrefill:
+    """Callable wrapper over ``api.prefill`` with bucketing + jit caching.
+
+    ``__call__(params, prompt)`` takes one un-padded int32 prompt and returns
+    ``(first_logits (1,1,V), cache)`` where ``first_logits`` are the logits
+    after the last real token and ``cache`` covers the full ``max_len``.
+    ``prompt_len``/``last_index`` ride through as traced values, so requests
+    of every length inside a bucket share one compiled program.
+    """
+
+    def __init__(self, api, *, max_len: int, quantized: bool = False,
+                 min_bucket: int = 16):
+        self.api = api
+        self.max_len = max_len
+        self.quantized = quantized
+        self.min_bucket = min_bucket
+        self._fns: Dict[Tuple[int, int], Callable] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def compiled_buckets(self) -> List[Tuple[int, int]]:
+        return sorted(self._fns)
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return bucket_for(prompt_len, self.max_len, min_bucket=self.min_bucket)
+
+    def fn(self, bucket: int, batch: int = 1) -> Callable:
+        """The jitted prefill program for one (bucket, batch) shape."""
+        key = (bucket, batch)
+        cached = self._fns.get(key)
+        if cached is not None:
+            self.hits += 1
+            return cached
+        self.misses += 1
+
+        def prefill(params, tokens, last_index):
+            return self.api.prefill(
+                params, {"tokens": tokens}, max_len=self.max_len,
+                quantized=self.quantized, last_index=last_index,
+            )
+
+        fn = jax.jit(prefill)
+        self._fns[key] = fn
+        return fn
+
+    def __call__(self, params, prompt: np.ndarray):
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        plen = len(prompt)
+        if plen < 1:
+            raise ValueError("empty prompt")
+        bucket = self.bucket_for(plen)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :plen] = prompt  # right-pad: exact under causal attention
+        logits, cache = self.fn(bucket, 1)(
+            params, jnp.asarray(toks), jnp.asarray([plen - 1], jnp.int32)
+        )
+        return logits, cache

@@ -1,10 +1,21 @@
-"""Batched serving engine.
+"""Serving engines: continuous-batching slot scheduler + static packed batches.
 
-Static-batch continuous-ish scheduler: requests queue up, the engine packs up
-to ``batch_size`` of them (padding prompts to a shared length), runs one
-jitted prefill, then jitted single-token decode steps until every request in
-the batch has finished (EOS or max_new_tokens). The decode loop is the
-``serve_step`` the decode_* / long_* dry-run cells lower.
+``ServeEngine`` fronts two scheduling policies behind one queue/submit/run
+API:
+
+- ``engine="continuous"`` — the slot scheduler (serve/scheduler.py): fixed
+  decode batch of ``n_slots`` rows, bucketed per-request prefill-into-slot,
+  slots freed the moment a request finishes, queued requests admitted
+  mid-flight. No head-of-line blocking; the jitted decode step never
+  recompiles.
+- ``engine="static"`` — the original drainer (kept for A/B benchmarking and
+  for model families the scheduler does not cover): pack up to
+  ``batch_size`` requests, left-pad to a shared length, run the whole group
+  to completion before admitting anything else.
+- ``engine="auto"`` (default) — continuous when the architecture supports it
+  (non-MoE ``lm``), static otherwise. ``run(extra_batch=...)`` (encdec
+  frames etc.) always routes through the static path: extra inputs are
+  packed-batch-shaped by construction.
 
 With ``phase='serve'`` the engine runs hardware-form parameters — int8
 thresholds + packed signs for BiKA, packed sign bits for BNN, int8 weights +
@@ -19,7 +30,6 @@ two lines.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -28,6 +38,7 @@ import numpy as np
 
 from repro.core.convert import tree_to_serve
 from repro.models.base import ArchConfig, ModelAPI
+from repro.serve.scheduler import Request, SlotScheduler, scheduler_supports
 
 __all__ = ["Request", "ServeEngine", "serve_batch", "serve_params_from_train"]
 
@@ -36,15 +47,6 @@ def serve_params_from_train(train_params, spec):
     """Trained float params (any model tree) -> hardware serve form via the
     backend registry. Thin serving-layer alias of ``convert.tree_to_serve``."""
     return tree_to_serve(train_params, spec)
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray  # (S,) int32
-    max_new_tokens: int = 16
-    eos_id: Optional[int] = None
-    output: Optional[np.ndarray] = None
 
 
 class ServeEngine:
@@ -57,6 +59,9 @@ class ServeEngine:
         batch_size: int = 4,
         max_len: int = 256,
         quantized_kv: bool = False,
+        engine: str = "auto",
+        n_slots: Optional[int] = None,
+        min_bucket: int = 16,
     ):
         self.api = api
         self.params = params
@@ -64,6 +69,20 @@ class ServeEngine:
         self.batch_size = batch_size
         self.max_len = max_len
         self.quantized_kv = quantized_kv
+        if engine not in ("auto", "static", "continuous"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "auto":
+            engine = "continuous" if scheduler_supports(arch) else "static"
+        self.engine = engine
+        self.scheduler: Optional[SlotScheduler] = None
+        if engine == "continuous":
+            self.scheduler = SlotScheduler(
+                api, params, arch,
+                n_slots=n_slots or batch_size,
+                max_len=max_len,
+                quantized_kv=quantized_kv,
+                min_bucket=min_bucket,
+            )
         self._prefill = jax.jit(
             lambda p, batch: api.prefill(p, batch, max_len=max_len, quantized=quantized_kv)
         )
@@ -79,6 +98,7 @@ class ServeEngine:
         batch_size: int = 4,
         max_len: int = 256,
         quantized_kv: bool = False,
+        **kw,
     ) -> "ServeEngine":
         """Build a serve-phase engine directly from a trained checkpoint:
         converts every linear leaf through its registered backend's
@@ -89,10 +109,27 @@ class ServeEngine:
         api = build_model(arch, phase="serve")
         params = serve_params_from_train(train_params, arch.linear_spec())
         return cls(api, params, arch, batch_size=batch_size, max_len=max_len,
-                   quantized_kv=quantized_kv)
+                   quantized_kv=quantized_kv, **kw)
+
+    @property
+    def metrics(self):
+        """RunMetrics of the continuous scheduler (None for static)."""
+        return self.scheduler.metrics if self.scheduler is not None else None
 
     def submit(self, req: Request):
-        self.queue.append(req)
+        if req.max_new_tokens < 1:
+            raise ValueError(f"req {req.rid}: max_new_tokens must be >= 1")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"req {req.rid}: prompt length {len(req.prompt)} >= max_len "
+                f"{self.max_len} leaves no room to generate"
+            )
+        if self.engine == "continuous":
+            self.scheduler.submit(req)
+        else:
+            self.queue.append(req)
+
+    # -- static path --------------------------------------------------------
 
     def _pack(self, reqs: Sequence[Request]):
         s = max(len(r.prompt) for r in reqs)
@@ -102,22 +139,50 @@ class ServeEngine:
             toks[i, s - len(r.prompt):] = r.prompt  # left-pad (causal-safe)
         return jnp.asarray(toks), s
 
+    @staticmethod
+    def _slice_extra(extra_batch: Dict, n: int) -> Dict:
+        """Trim batched extra inputs (encdec frames, ...) to the packed batch
+        size — the final partial group of a drain is smaller than
+        batch_size."""
+        out = {}
+        for k, v in extra_batch.items():
+            if hasattr(v, "ndim") and v.ndim >= 1 and v.shape[0] > n:
+                v = v[:n]
+            out[k] = v
+        return out
+
     def step_batch(self, reqs: Sequence[Request], extra_batch: Optional[Dict] = None):
-        """Prefill + greedy decode one packed batch; fills req.output."""
+        """Static path: prefill + greedy-decode one packed batch to
+        completion; fills req.output. The host loop breaks as soon as every
+        row is finished (EOS or its token budget) instead of always running
+        to max(max_new_tokens)."""
         tokens, s = self._pack(reqs)
         batch = {"tokens": tokens}
         if extra_batch:
-            batch.update(extra_batch)
+            batch.update(self._slice_extra(extra_batch, len(reqs)))
         logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        # decode writes go to positions s .. s+n_steps-2; cap the loop at the
+        # KV cache end instead of silently wrapping/corrupting row max_len-1
         n_steps = max(r.max_new_tokens for r in reqs)
-        outs = [np.asarray(tok)[:, 0]]
+        n_steps = max(1, min(n_steps, self.max_len - s + 1))
+        need = np.array([r.max_new_tokens for r in reqs])
+        eos = np.array([-1 if r.eos_id is None else r.eos_id for r in reqs])
+        cur = np.asarray(tok)[:, 0]
+        outs = [cur]
+        finished = (cur == eos) | (need <= 1)
+        self._stream(reqs, cur, np.zeros(len(reqs), bool), 0, need)
         for t in range(1, n_steps):
+            if finished.all():
+                break
             pos = jnp.asarray(s + t - 1, jnp.int32)
             logits, cache = self._decode(self.params, tok, cache, pos)
             tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            outs.append(np.asarray(tok)[:, 0])
-        gen = np.stack(outs, axis=1)  # (B, n_steps)
+            cur = np.asarray(tok)[:, 0]
+            self._stream(reqs, cur, finished, t, need)
+            outs.append(cur)
+            finished = finished | (cur == eos) | (t + 1 >= need)
+        gen = np.stack(outs, axis=1)  # (B, <= n_steps)
         for i, r in enumerate(reqs):
             g = gen[i, : r.max_new_tokens]
             if r.eos_id is not None:
@@ -127,8 +192,22 @@ class ServeEngine:
             r.output = g
         return reqs
 
+    @staticmethod
+    def _stream(reqs, cur, already_finished, t, need):
+        for i, r in enumerate(reqs):
+            if r.on_token is not None and not already_finished[i] and t < need[i]:
+                r.on_token(int(cur[i]))
+
     def run(self, extra_batch: Optional[Dict] = None) -> List[Request]:
-        """Drain the queue in batch_size groups."""
+        """Drain all submitted requests. Continuous: slot scheduler; static:
+        batch_size groups run to completion."""
+        if self.engine == "continuous":
+            if extra_batch is not None:
+                raise ValueError(
+                    "extra_batch is packed-batch-shaped and only supported by "
+                    "the static engine (pass engine='static')"
+                )
+            return self.scheduler.run()
         done: List[Request] = []
         while self.queue:
             batch, self.queue = self.queue[: self.batch_size], self.queue[self.batch_size:]

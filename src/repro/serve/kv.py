@@ -1,0 +1,84 @@
+"""KV slot manager for continuous batching.
+
+Owns ONE device-resident KV cache shaped per the ``models/base.py``
+``KVCacheLayout`` contract — every leaf ``(n_layers, n_slots, max_len,
+n_kv_heads, head_dim)`` (fp or quantized int8+scale form) — and treats the
+batch axis as a pool of request slots:
+
+- ``alloc()`` / ``free(slot)`` — host-side slot bookkeeping (O(1), no device
+  traffic). Freeing does not zero the slot: every position a future request
+  can attend to is overwritten first (prefill rewrites ``[0, max_len)``;
+  decode writes position ``p`` before any row attends to it, and unwritten
+  tail positions are masked out by the per-row ``valid_len``).
+- ``write_prefill(slot, prefill_cache)`` — splice a single-request prefill
+  cache (leaves ``(n_layers, 1, max_len, ...)``) into the slot row with one
+  jitted donate+dynamic_update_slice per leaf. The slot index is a traced
+  scalar, so this compiles exactly once per cache pytree structure.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.base import KVCacheLayout, kv_cache_layout
+
+__all__ = ["KVSlotManager"]
+
+
+@partial(jax.jit, donate_argnums=(0,))
+def _splice_slot(cache, pcache, slot):
+    """Write a batch-1 prefill cache into row ``slot`` of the slot cache."""
+
+    def one(buf, upd):
+        start = (0, slot) + (0,) * (buf.ndim - 2)
+        return jax.lax.dynamic_update_slice(buf, upd.astype(buf.dtype), start)
+
+    return jax.tree_util.tree_map(one, cache, pcache)
+
+
+class KVSlotManager:
+    def __init__(self, api, *, n_slots: int, max_len: int, quantized: bool = False):
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.quantized = quantized
+        self.cache = api.init_cache(n_slots, max_len, quantized=quantized)
+        self.layout: KVCacheLayout = kv_cache_layout(self.cache)
+        assert self.layout.n_slots == n_slots and self.layout.max_len == max_len, self.layout
+        self._free: List[int] = list(range(n_slots))
+
+    # -- slot bookkeeping ---------------------------------------------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        """Claim a free slot (lowest index first); None when fully occupied."""
+        return self._free.pop(0) if self._free else None
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
+        self._free.append(slot)
+        self._free.sort()
+
+    def reset(self) -> None:
+        """Return every slot to the free pool (cache contents stay; see
+        module docstring for why stale data is unreachable)."""
+        self._free = list(range(self.n_slots))
+
+    # -- device ops ---------------------------------------------------------
+
+    def write_prefill(self, slot: int, prefill_cache) -> None:
+        """Splice a batch-1 prefill cache (leaves (L, 1, max_len, ...)) into
+        row ``slot``. The prefill must have been run with the pool's
+        ``max_len`` and quantization so leaf shapes/dtypes line up."""
+        pl = kv_cache_layout(prefill_cache)
+        if pl.n_slots != 1 or pl.max_len != self.max_len:
+            raise ValueError(f"prefill cache layout {pl} does not match pool {self.layout}")
+        self.cache = _splice_slot(self.cache, prefill_cache, jnp.asarray(slot, jnp.int32))

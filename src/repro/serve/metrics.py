@@ -1,0 +1,122 @@
+"""Serving metrics: per-request latency breakdown + per-run aggregates.
+
+Definitions (DESIGN.md §4):
+
+- **TTFT** — time from ``submit`` to the first emitted token. Under
+  continuous batching the first token falls out of the prefill itself, so
+  TTFT is queue wait + one bucketed prefill.
+- **TPOT** (time per output token) — steady-state decode latency,
+  ``(t_done - t_first_token) / (n_tokens - 1)`` for requests with more than
+  one token.
+- **Goodput** — completed output tokens per second of wall time across the
+  whole run. Tokens decoded for already-finished rows (the static engine's
+  head-of-line waste) do not count — that is exactly what continuous
+  batching reclaims.
+- **Slot occupancy** — mean fraction of decode-batch rows doing useful work
+  per step. A static engine padded to its slowest request drifts toward 1/B;
+  a slot scheduler stays near 1 under load.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+__all__ = ["RequestMetrics", "RunMetrics"]
+
+
+@dataclasses.dataclass
+class RequestMetrics:
+    rid: int
+    prompt_len: int = 0
+    t_submit: Optional[float] = None
+    t_admit: Optional[float] = None  # prefill-into-slot time (continuous only)
+    t_first_token: Optional[float] = None
+    t_done: Optional[float] = None
+    n_tokens: int = 0
+
+    @property
+    def ttft(self) -> Optional[float]:
+        if self.t_submit is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_submit
+
+    @property
+    def tpot(self) -> Optional[float]:
+        if self.t_first_token is None or self.t_done is None or self.n_tokens < 2:
+            return None
+        return (self.t_done - self.t_first_token) / (self.n_tokens - 1)
+
+    def to_dict(self) -> Dict:
+        return {
+            "rid": self.rid,
+            "prompt_len": self.prompt_len,
+            "n_tokens": self.n_tokens,
+            "ttft_s": self.ttft,
+            "tpot_s": self.tpot,
+        }
+
+
+def _percentile(sorted_vals: List[float], q: float) -> float:
+    """Nearest-rank percentile on an already-sorted list."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(round(q * (len(sorted_vals) - 1)))))
+    return sorted_vals[idx]
+
+
+@dataclasses.dataclass
+class RunMetrics:
+    """Aggregates accumulated by the scheduler / engine over one run."""
+
+    n_slots: int = 1
+    t_start: Optional[float] = None
+    t_end: Optional[float] = None
+    completed_requests: int = 0
+    completed_tokens: int = 0
+    decode_steps: int = 0
+    prefills: int = 0
+    prefill_compiles: int = 0  # bucketed-jit cache misses
+    _occupancy_sum: float = 0.0
+    requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
+
+    def record_step(self, n_active: int) -> None:
+        self.decode_steps += 1
+        self._occupancy_sum += n_active / max(self.n_slots, 1)
+
+    def finish_request(self, rm: RequestMetrics) -> None:
+        self.completed_requests += 1
+        self.completed_tokens += rm.n_tokens
+        self.requests.append(rm)
+
+    @property
+    def wall_s(self) -> float:
+        if self.t_start is None or self.t_end is None:
+            return 0.0
+        return self.t_end - self.t_start
+
+    @property
+    def goodput_tok_s(self) -> float:
+        return self.completed_tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+    @property
+    def slot_occupancy(self) -> float:
+        return self._occupancy_sum / self.decode_steps if self.decode_steps else 0.0
+
+    def summary(self) -> Dict:
+        ttfts = sorted(r.ttft for r in self.requests if r.ttft is not None)
+        tpots = sorted(r.tpot for r in self.requests if r.tpot is not None)
+        return {
+            "n_slots": self.n_slots,
+            "completed_requests": self.completed_requests,
+            "completed_tokens": self.completed_tokens,
+            "wall_s": self.wall_s,
+            "goodput_tok_s": self.goodput_tok_s,
+            "decode_steps": self.decode_steps,
+            "slot_occupancy": self.slot_occupancy,
+            "prefills": self.prefills,
+            "prefill_compiles": self.prefill_compiles,
+            "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
+            "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
+            "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,
+            "tpot_mean_s": sum(tpots) / len(tpots) if tpots else None,
+        }

@@ -1,0 +1,268 @@
+"""Slot-based continuous-batching scheduler.
+
+The decode batch is a fixed pool of ``n_slots`` rows. A request is admitted
+by prefilling it ALONE (batch-1, shape-bucketed — see compile_cache.py) and
+splicing its KV into a free slot row; from then on it rides the shared jitted
+decode step. When a request hits EOS / its token budget, its slot is freed
+*immediately* and the next queued request is admitted on the following tick —
+no head-of-line blocking on the slowest request in a batch.
+
+The jitted tick has ONE signature for the whole run —
+``(params, tok (S,1), cache, positions (S,))`` — with per-slot positions
+carried as a device array (the per-row decode path in nn/attention.py), so
+admissions/completions never trigger a recompile. EOS / budget / activity
+bookkeeping lives on the host, which must sync every step anyway to stream
+tokens out.
+
+Inactive (free) rows keep decoding junk at their last position — shape
+stability is worth one wasted row of FLOPs — and their writes are harmless:
+a freshly admitted request's prefill overwrites ``[0, max_len)`` of its slot,
+and decode overwrites position ``p`` before any attention step can see it
+(positions ``>= valid_len`` are masked per row).
+
+Supported families: attention-KV models (``family == "lm"``) without MoE.
+Recurrent state (hybrid/xlstm) cannot be right-pad-bucketed (pad tokens
+corrupt the state), and MoE capacity routing couples batch rows, which both
+breaks bit-exactness and would let junk rows steal expert capacity.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ArchConfig, ModelAPI
+from repro.serve.compile_cache import BucketedPrefill
+from repro.serve.kv import KVSlotManager
+from repro.serve.metrics import RequestMetrics, RunMetrics
+
+__all__ = ["Request", "SlotScheduler", "replay_arrivals", "scheduler_supports"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    output: Optional[np.ndarray] = None
+    # streaming: called once per emitted token (including EOS), in order
+    on_token: Optional[Callable[[int], None]] = None
+    metrics: Optional[RequestMetrics] = None
+
+
+def scheduler_supports(arch: ArchConfig) -> bool:
+    """Whether SlotScheduler can serve this architecture (see module doc).
+    SWA is excluded too: the ring cache is shorter than max_len, which
+    breaks the full-length KVCacheLayout contract the slot pool assumes."""
+    return arch.family == "lm" and arch.n_experts == 0 and arch.window is None
+
+
+@dataclasses.dataclass
+class _SlotState:
+    req: Request
+    remaining: int  # tokens still allowed (after the prefill token)
+    emitted: List[int]
+
+
+class SlotScheduler:
+    def __init__(
+        self,
+        api: ModelAPI,
+        params,
+        arch: ArchConfig,
+        *,
+        n_slots: int = 4,
+        max_len: int = 256,
+        quantized_kv: bool = False,
+        min_bucket: int = 16,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if not scheduler_supports(arch):
+            raise ValueError(
+                f"SlotScheduler supports non-MoE, non-SWA 'lm' models; got family="
+                f"{arch.family!r} n_experts={arch.n_experts} window={arch.window} "
+                f"(use the static engine)"
+            )
+        self.api = api
+        self.params = params
+        self.arch = arch
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.clock = clock
+        self.kv = KVSlotManager(api, n_slots=n_slots, max_len=max_len, quantized=quantized_kv)
+        self.prefill = BucketedPrefill(
+            api, max_len=max_len, quantized=quantized_kv, min_bucket=min_bucket
+        )
+        self.metrics = RunMetrics(n_slots=n_slots)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self._slots: List[Optional[_SlotState]] = [None] * n_slots
+        self._tok = np.zeros(n_slots, np.int32)  # last emitted token per slot
+        self._pos = np.zeros(n_slots, np.int32)  # cache position of the NEXT write
+        self._tick_fn = self._build_tick()
+
+    def _build_tick(self):
+        decode = self.api.decode_step
+
+        @partial(jax.jit, donate_argnums=(1,))
+        def tick(params, cache, tok, pos):
+            logits, cache = decode(params, tok[:, None], cache, pos)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        return tick
+
+    # -- queue --------------------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or self.n_active > 0
+
+    def reset_metrics(self) -> None:
+        """Start a fresh RunMetrics window (aggregates are otherwise
+        cumulative across run() calls — e.g. warmup + timed run)."""
+        self.metrics = RunMetrics(n_slots=self.n_slots)
+
+    def submit(self, req: Request) -> None:
+        plen = len(req.prompt)
+        if plen < 1:
+            raise ValueError(f"req {req.rid}: empty prompt")
+        if req.max_new_tokens < 1:
+            raise ValueError(f"req {req.rid}: max_new_tokens must be >= 1")
+        if plen >= self.max_len:
+            raise ValueError(
+                f"req {req.rid}: prompt length {plen} >= max_len {self.max_len} "
+                f"leaves no room to generate"
+            )
+        req.metrics = RequestMetrics(rid=req.rid, prompt_len=plen, t_submit=self.clock())
+        self.queue.append(req)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _finish(self, req: Request, st: _SlotState) -> None:
+        req.output = np.asarray(st.emitted, np.int32)
+        req.metrics.t_done = self.clock()
+        req.metrics.n_tokens = len(st.emitted)
+        self.metrics.finish_request(req.metrics)
+        self.completed.append(req)
+
+    def _emit(self, st: _SlotState, token: int) -> bool:
+        """Record one generated token; returns True when the request is done."""
+        st.emitted.append(token)
+        st.remaining -= 1
+        req = st.req
+        if req.metrics.t_first_token is None:
+            req.metrics.t_first_token = self.clock()
+        if req.on_token is not None:
+            req.on_token(token)
+        return st.remaining <= 0 or (req.eos_id is not None and token == req.eos_id)
+
+    def _admit_one(self, req: Request) -> None:
+        slot = self.kv.alloc()
+        assert slot is not None
+        logits, pcache = self.prefill(self.params, req.prompt)
+        self.metrics.prefills += 1
+        req.metrics.t_admit = self.clock()
+        t0 = int(np.argmax(np.asarray(logits)[0, -1]))
+        plen = req.metrics.prompt_len
+        # decode writes go to plen .. plen+n-2; keep them inside the cache
+        budget = min(req.max_new_tokens, self.max_len - plen + 1)
+        st = _SlotState(req=req, remaining=budget, emitted=[])
+        if self._emit(st, t0):
+            self._finish(req, st)
+            self.kv.free(slot)
+            return
+        self.kv.write_prefill(slot, pcache)
+        self._slots[slot] = st
+        self._tok[slot] = t0
+        self._pos[slot] = plen
+
+    def _admit(self) -> None:
+        while self.queue and self.kv.n_free:
+            self._admit_one(self.queue.pop(0))
+
+    def tick(self) -> bool:
+        """Admit waiting requests, then run one decode step over the slot
+        batch. Returns False when there was nothing to do."""
+        self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return False
+        nxt, self.kv.cache = self._tick_fn(
+            self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
+        )
+        nxt = np.asarray(nxt)
+        self.metrics.record_step(len(active))
+        for i in active:
+            st = self._slots[i]
+            self._tok[i] = nxt[i]
+            self._pos[i] += 1
+            if self._emit(st, int(nxt[i])):
+                self._finish(st.req, st)
+                self._slots[i] = None
+                self.kv.free(i)
+                # park the freed row at a safe in-bounds position; its junk
+                # writes are overwritten by the next admission's prefill
+                self._tok[i] = 0
+                self._pos[i] = 0
+        return True
+
+    def run(self) -> List[Request]:
+        """Drain queue + slots to completion; returns finished requests in
+        completion order."""
+        if self.metrics.t_start is None:
+            self.metrics.t_start = self.clock()
+        while self.has_work:
+            self.tick()
+        self.metrics.t_end = self.clock()
+        self.metrics.prefill_compiles = self.prefill.misses
+        done, self.completed = self.completed, []
+        return done
+
+
+def replay_arrivals(
+    sched: SlotScheduler,
+    timed_requests,
+    *,
+    submit: Optional[Callable[[Request, float], None]] = None,
+    sleep: Callable[[float], None] = time.sleep,
+) -> Tuple[List[Request], float]:
+    """Open-loop arrival replay: tick the scheduler, admitting each request
+    the moment its arrival offset elapses (used by launch/serve.py
+    --arrival-rate and benchmarks/serving_bench.py).
+
+    ``timed_requests`` is ``[(arrival_offset_s, Request), ...]`` sorted by
+    offset. ``submit(req, t_abs)`` (default ``sched.submit``) lets callers
+    stamp measurement taps with the absolute arrival time before submission.
+    Returns ``(completed_requests, makespan_s)`` and stamps the scheduler's
+    run metrics (t_start/t_end/prefill_compiles).
+    """
+    clock = sched.clock
+    pending = list(timed_requests)
+    t0 = clock()
+    if sched.metrics.t_start is None:
+        sched.metrics.t_start = t0
+    while pending or sched.has_work:
+        now = clock() - t0
+        while pending and pending[0][0] <= now:
+            t_arr, req = pending.pop(0)
+            if submit is not None:
+                submit(req, t0 + t_arr)
+            else:
+                sched.submit(req)
+        if not sched.tick() and pending:
+            sleep(max(0.0, pending[0][0] - (clock() - t0)))
+    t_end = clock()
+    sched.metrics.t_end = t_end
+    sched.metrics.prefill_compiles = sched.prefill.misses
+    done, sched.completed = sched.completed, []
+    return done, t_end - t0

@@ -1,0 +1,349 @@
+"""Continuous-batching serving runtime tests: slot scheduler bit-exactness
+vs the serve_batch reference, bucketed compile cache, KV slot manager, edge
+cases (empty queue, oversized prompts, instant EOS, slot starvation), the
+static engine's early-EOS break, and the encdec partial-batch fix."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models import build_model
+from repro.models.base import kv_cache_layout
+from repro.nn.module import unbox
+from repro.serve import (
+    BucketedPrefill,
+    KVSlotManager,
+    Request,
+    ServeEngine,
+    SlotScheduler,
+    bucket_for,
+    scheduler_supports,
+    serve_batch,
+)
+
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(scope="module")
+def lm():
+    cfg = get_smoke("smollm-360m", compute_mode="dense", remat=False)
+    api = build_model(cfg, phase="train")
+    params = unbox(api.init(KEY))
+    return cfg, api, params
+
+
+def _ref(api, params, prompt, n_new, max_len):
+    """Per-request serve_batch reference (batch of one, unpadded)."""
+    out = serve_batch(api, params, jnp.asarray(prompt)[None],
+                      max_new_tokens=n_new, max_len=max_len)
+    return np.asarray(out)[0]
+
+
+def _mixed_prompts(rng, vocab, n, lo=3, hi=12):
+    return [rng.randint(0, vocab, size=int(rng.randint(lo, hi))).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# continuous engine: exactness
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_mixed_lengths_bit_identical(lm):
+    cfg, api, params = lm
+    rng = np.random.RandomState(0)
+    prompts = _mixed_prompts(rng, cfg.vocab, 6)
+    eng = ServeEngine(api, params, cfg, max_len=32, engine="continuous", n_slots=3)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=6))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == len(prompts)
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(done[i].output, _ref(api, params, p, 6, 32))
+
+
+def test_three_way_bit_identical_equal_lengths(lm):
+    """continuous == static == serve_batch, token for token (equal-length
+    prompts so the static engine's left-padding is a no-op)."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(1)
+    prompts = rng.randint(0, cfg.vocab, size=(4, 7)).astype(np.int32)
+    ref = np.asarray(serve_batch(api, params, jnp.asarray(prompts),
+                                 max_new_tokens=5, max_len=32))
+    outs = {}
+    for engine in ("static", "continuous"):
+        eng = ServeEngine(api, params, cfg, batch_size=4, max_len=32, engine=engine)
+        for i in range(4):
+            eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=5))
+        outs[engine] = {r.rid: r.output for r in eng.run()}
+    for i in range(4):
+        np.testing.assert_array_equal(outs["static"][i], ref[i])
+        np.testing.assert_array_equal(outs["continuous"][i], ref[i])
+
+
+def test_single_slot_more_requests_than_slots(lm):
+    cfg, api, params = lm
+    rng = np.random.RandomState(2)
+    prompts = _mixed_prompts(rng, cfg.vocab, 5)
+    eng = ServeEngine(api, params, cfg, max_len=32, engine="continuous", n_slots=1)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    done = {r.rid: r for r in eng.run()}
+    assert len(done) == 5
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(done[i].output, _ref(api, params, p, 4, 32))
+
+
+def test_continuous_serve_phase_bika_bit_identical():
+    cfg = get_smoke("smollm-360m", compute_mode="bika", remat=False).replace(
+        pack_signs=True)
+    api = build_model(cfg, phase="serve")
+    params = unbox(api.init(KEY))
+    rng = np.random.RandomState(3)
+    prompts = _mixed_prompts(rng, cfg.vocab, 4)
+    eng = ServeEngine(api, params, cfg, max_len=32, engine="continuous", n_slots=2)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=5))
+    done = {r.rid: r for r in eng.run()}
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(done[i].output, _ref(api, params, p, 5, 32))
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_run_empty_queue(lm):
+    cfg, api, params = lm
+    for engine in ("static", "continuous"):
+        eng = ServeEngine(api, params, cfg, max_len=16, engine=engine)
+        assert eng.run() == []
+
+
+def test_prompt_longer_than_max_len_rejected(lm):
+    cfg, api, params = lm
+    rng = np.random.RandomState(4)
+    for engine in ("static", "continuous"):
+        eng = ServeEngine(api, params, cfg, max_len=8, engine=engine)
+        with pytest.raises(ValueError, match="max_len"):
+            eng.submit(Request(rid=0, prompt=rng.randint(0, cfg.vocab, 8)
+                               .astype(np.int32)))
+
+
+def test_eos_on_first_token(lm):
+    """EOS emitted by the prefill itself: output is exactly [eos], and the
+    slot never occupies a decode row."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab, 6).astype(np.int32)
+    first = int(_ref(api, params, prompt, 1, 32)[0])
+    for engine in ("static", "continuous"):
+        eng = ServeEngine(api, params, cfg, max_len=32, engine=engine)
+        eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=first))
+        done = eng.run()
+        np.testing.assert_array_equal(done[0].output, [first])
+    # continuous path: no decode steps were needed at all
+    sched = SlotScheduler(api, params, cfg, n_slots=2, max_len=32)
+    req = Request(rid=0, prompt=prompt, max_new_tokens=8, eos_id=first)
+    sched.submit(req)
+    sched.run()
+    assert sched.metrics.decode_steps == 0 and sched.kv.n_free == 2
+
+
+def test_mid_stream_admission(lm):
+    """Requests submitted while the scheduler is mid-flight are picked up
+    without draining first."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(6)
+    prompts = _mixed_prompts(rng, cfg.vocab, 4)
+    sched = SlotScheduler(api, params, cfg, n_slots=2, max_len=32)
+    sched.submit(Request(rid=0, prompt=prompts[0], max_new_tokens=6))
+    sched.submit(Request(rid=1, prompt=prompts[1], max_new_tokens=6))
+    for _ in range(2):
+        sched.tick()
+    sched.submit(Request(rid=2, prompt=prompts[2], max_new_tokens=6))
+    sched.submit(Request(rid=3, prompt=prompts[3], max_new_tokens=6))
+    done = {r.rid: r for r in sched.run()}
+    assert len(done) == 4
+    for i, p in enumerate(prompts):
+        np.testing.assert_array_equal(done[i].output, _ref(api, params, p, 6, 32))
+
+
+def test_streaming_callbacks_match_output(lm):
+    cfg, api, params = lm
+    rng = np.random.RandomState(7)
+    prompts = _mixed_prompts(rng, cfg.vocab, 3)
+    for engine in ("static", "continuous"):
+        streamed = {i: [] for i in range(3)}
+        eng = ServeEngine(api, params, cfg, batch_size=2, max_len=32, engine=engine)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(rid=i, prompt=p, max_new_tokens=5,
+                               on_token=streamed[i].append))
+        done = {r.rid: r for r in eng.run()}
+        for i in range(3):
+            np.testing.assert_array_equal(streamed[i], done[i].output)
+
+
+# ---------------------------------------------------------------------------
+# components: compile cache, KV slots, metrics
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_for_policy():
+    assert bucket_for(1, 64) == 16  # min bucket
+    assert bucket_for(16, 64) == 16
+    assert bucket_for(17, 64) == 32
+    assert bucket_for(33, 64) == 64
+    assert bucket_for(50, 96) == 64
+    assert bucket_for(70, 96) == 96  # terminal bucket is max_len itself
+    with pytest.raises(ValueError):
+        bucket_for(97, 96)
+
+
+def test_bucketed_prefill_compiles_once_per_bucket(lm):
+    cfg, api, params = lm
+    bp = BucketedPrefill(api, max_len=64, min_bucket=8)
+    rng = np.random.RandomState(8)
+    lens = [3, 5, 8, 9, 12, 16, 17, 20]  # buckets: 8,8,8,16,16,16,32,32
+    for n in lens:
+        logits, cache = bp(params, rng.randint(0, cfg.vocab, n).astype(np.int32))
+        assert logits.shape[:2] == (1, 1)
+        assert kv_cache_layout(cache).max_len == 64
+    assert bp.misses == 3  # one compile per bucket {8, 16, 32}
+    assert bp.hits == len(lens) - 3
+    assert bp.compiled_buckets == [(8, 1), (16, 1), (32, 1)]
+
+
+def test_bucketed_prefill_logits_exact(lm):
+    """Right-padding to a bucket leaves the last real token's logits
+    bit-identical to the unpadded prefill."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(9)
+    prompt = rng.randint(0, cfg.vocab, 11).astype(np.int32)
+    bp = BucketedPrefill(api, max_len=64, min_bucket=16)
+    got, _ = bp(params, prompt)
+    want, _ = api.prefill(params, {"tokens": jnp.asarray(prompt)[None]}, max_len=64)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kv_slot_manager_alloc_free(lm):
+    cfg, api, params = lm
+    kv = KVSlotManager(api, n_slots=3, max_len=16)
+    assert kv.layout.n_slots == 3 and kv.layout.max_len == 16
+    assert kv.layout.n_layers == cfg.n_layers
+    s0, s1 = kv.alloc(), kv.alloc()
+    assert (s0, s1) == (0, 1) and kv.n_free == 1
+    kv.free(s0)
+    with pytest.raises(ValueError):
+        kv.free(s0)  # double free
+    assert kv.alloc() == 0  # lowest index first
+    kv.reset()
+    assert kv.n_free == 3
+
+
+def test_kv_slot_splice_isolates_rows(lm):
+    """write_prefill touches only the target slot row."""
+    cfg, api, params = lm
+    kv = KVSlotManager(api, n_slots=2, max_len=16)
+    before = np.asarray(kv.cache["k"][:, 0])
+    bp = BucketedPrefill(api, max_len=16, min_bucket=8)
+    _, pcache = bp(params, np.arange(1, 6, dtype=np.int32))
+    kv.write_prefill(1, pcache)
+    np.testing.assert_array_equal(np.asarray(kv.cache["k"][:, 0]), before)
+    assert np.abs(np.asarray(kv.cache["k"][:, 1, :5])).sum() > 0
+
+
+def test_scheduler_supports_gating():
+    assert scheduler_supports(get_smoke("smollm-360m"))
+    assert not scheduler_supports(get_smoke("mixtral-8x22b"))  # MoE
+    assert not scheduler_supports(get_smoke("xlstm-125m"))  # recurrent
+    cfg = get_smoke("xlstm-125m")
+    api = build_model(cfg, phase="train")
+    with pytest.raises(ValueError, match="static"):
+        SlotScheduler(api, None, cfg)
+    # auto engine falls back to static for unsupported families
+    eng = ServeEngine(api, unbox(api.init(KEY)), cfg, max_len=16)
+    assert eng.engine == "static"
+
+
+def test_run_metrics_populated(lm):
+    cfg, api, params = lm
+    rng = np.random.RandomState(10)
+    eng = ServeEngine(api, params, cfg, max_len=32, engine="continuous", n_slots=2)
+    for i, p in enumerate(_mixed_prompts(rng, cfg.vocab, 4)):
+        eng.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    eng.run()
+    m = eng.metrics.summary()
+    assert m["completed_requests"] == 4
+    assert m["completed_tokens"] == 16
+    assert m["goodput_tok_s"] > 0
+    assert 0 < m["slot_occupancy"] <= 1
+    assert m["prefills"] == 4
+    assert m["prefill_compiles"] >= 1
+    assert m["ttft_mean_s"] is not None and m["ttft_mean_s"] >= 0
+    per_req = [r.to_dict() for r in eng.metrics.requests]
+    assert all(d["n_tokens"] == 4 for d in per_req)
+
+
+# ---------------------------------------------------------------------------
+# static engine satellite fixes
+# ---------------------------------------------------------------------------
+
+
+def test_static_breaks_host_loop_when_all_rows_done(lm):
+    """All rows hit EOS early -> the decode loop stops instead of running to
+    max(max_new_tokens)."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(11)
+    prompts = rng.randint(0, cfg.vocab, size=(2, 6)).astype(np.int32)
+    firsts = [int(_ref(api, params, prompts[i], 1, 64)[0]) for i in range(2)]
+    eng = ServeEngine(api, params, cfg, batch_size=2, max_len=64, engine="static")
+    calls = {"n": 0}
+    inner = eng._decode
+
+    def counting_decode(*a, **k):
+        calls["n"] += 1
+        return inner(*a, **k)
+
+    eng._decode = counting_decode
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=prompts[i], max_new_tokens=50,
+                           eos_id=firsts[i]))
+    done = eng.run()
+    assert all(len(r.output) == 1 for r in done)
+    assert calls["n"] == 0  # every row finished on the prefill token
+
+
+def test_static_caps_decode_at_cache_end(lm):
+    """prompt_len + max_new_tokens > max_len: the static loop stops at the
+    cache end (truncated output) instead of clamp-overwriting the last KV
+    row and emitting corrupted tokens."""
+    cfg, api, params = lm
+    rng = np.random.RandomState(12)
+    prompt = rng.randint(0, cfg.vocab, 12).astype(np.int32)
+    eng = ServeEngine(api, params, cfg, batch_size=1, max_len=16, engine="static")
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=10))
+    out = eng.run()[0].output
+    assert len(out) == 16 - 12 + 1  # cache positions 12..15 + prefill token
+    np.testing.assert_array_equal(out, _ref(api, params, prompt, 5, 16))
+
+
+def test_swa_arch_falls_back_to_static(lm):
+    cfg, api, params = lm
+    swa = cfg.replace(window=8)
+    assert not scheduler_supports(swa)
+    eng = ServeEngine(api, params, swa, max_len=32)  # auto
+    assert eng.engine == "static"
+    with pytest.raises(ValueError, match="SWA"):
+        SlotScheduler(api, params, swa, max_len=32)
+
+
+def test_encdec_partial_batch_extra_frames():
+    """requests % batch_size != 0: the packed-batch extra inputs (frames)
+    are trimmed to the final partial group instead of shape-mismatching."""
+    from repro.launch.serve import main
+
+    assert main(["--arch", "seamless-m4t-large-v2", "--smoke", "--requests", "5",
+                 "--batch-size", "4", "--new-tokens", "4", "--max-len", "32"]) == 0
