@@ -15,13 +15,27 @@ head-of-line blocking (every packed group decodes until its LAST request
 finishes, and nothing new is admitted meanwhile) and per-shape prefill
 recompiles (one program per distinct packed prompt width vs. the continuous
 engine's power-of-two bucket cache).
+
+Multi-device row: unless ``--no-multi-device``, the bench re-execs itself in
+a subprocess with 8 forced host devices (``XLA_FLAGS``, as in
+test_distributed) and ``--tp 2``, running the continuous engine
+tensor-parallel on a (4, 2) data x model mesh, and merges the result in as
+``results[mode]["continuous_tp2"]`` — same workload trace, token-for-token
+the same outputs, so the row isolates the sharding overhead/benefit.
+(On CPU hosts the row measures dispatch overhead, not kernel speedup; on
+real accelerators the same flag spreads the weight/KV traffic over the
+mesh.)
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
+import tempfile
 import time
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -126,14 +140,15 @@ def run_static(api, params, arch, workload, *, batch_size: int, max_len: int,
 
 
 def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
-                   warmup: bool) -> Dict:
+                   warmup: bool, mesh=None) -> Dict:
     eng = ServeEngine(api, params, arch, max_len=max_len, engine="continuous",
-                      n_slots=n_slots)
+                      n_slots=n_slots, mesh=mesh)
     sched = eng.scheduler
     if warmup:
         _warmup(eng, arch.vocab)
+        # fresh metrics window: reset_metrics snapshots the prefill-compile
+        # counter, so the timed report below counts only its own misses
         sched.reset_metrics()
-    base_misses = sched.prefill.misses  # exclude warmup's compile from the report
     tap = _Tap()
 
     def submit(req, t_abs):
@@ -144,12 +159,12 @@ def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
     _, makespan = replay_arrivals(sched, workload, submit=submit)
     out = tap.summary(makespan)
     out["slot_occupancy"] = sched.metrics.slot_occupancy
-    out["prefill_compiles"] = sched.prefill.misses - base_misses
+    out["prefill_compiles"] = sched.metrics.prefill_compiles
     out["decode_steps"] = sched.metrics.decode_steps
     return out
 
 
-def bench_mode(mode: str, args) -> Dict:
+def bench_mode(mode: str, args, mesh=None) -> Dict:
     arch = get_smoke(args.arch, compute_mode=mode, remat=False)
     if mode == "bika":
         arch = arch.replace(pack_signs=True)
@@ -161,6 +176,15 @@ def bench_mode(mode: str, args) -> Dict:
         plen_range=(args.min_prompt, args.max_prompt),
         ntok_range=(args.min_new, args.max_new),
     )
+    if mesh is not None:
+        # multi-device child run: only the continuous engine rides the mesh
+        cont = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
+                              max_len=args.max_len, warmup=not args.no_warmup,
+                              mesh=mesh)
+        print(f"[{mode}] continuous tp={mesh.shape['model']}: "
+              f"{cont['goodput_tok_s']:.1f} tok/s | occupancy "
+              f"{cont['slot_occupancy']:.2f}")
+        return {"continuous": cont}
     static = run_static(api, params, arch, mk(), batch_size=args.batch_size,
                         max_len=args.max_len, warmup=not args.no_warmup)
     cont = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
@@ -172,6 +196,47 @@ def bench_mode(mode: str, args) -> Dict:
           f"occupancy {cont['slot_occupancy']:.2f} | prefill compiles "
           f"{cont['prefill_compiles']} vs {static['distinct_prefill_shapes']} shapes")
     return {"static": static, "continuous": cont, "goodput_ratio": ratio}
+
+
+def multi_device_row(args) -> Optional[Dict]:
+    """Re-exec the bench with 8 forced host devices + ``--tp 2`` and return
+    the child's per-mode continuous results (None if the child fails)."""
+    child_args = [
+        sys.executable, os.path.abspath(__file__),
+        "--arch", args.arch, "--modes", args.modes,
+        "--requests", str(args.requests),
+        "--arrival-rate", str(args.arrival_rate),
+        "--n-slots", str(args.n_slots), "--max-len", str(args.max_len),
+        "--min-prompt", str(args.min_prompt), "--max-prompt", str(args.max_prompt),
+        "--min-new", str(args.min_new), "--max-new", str(args.max_new),
+        "--seed", str(args.seed), "--tp", "2", "--no-multi-device",
+    ]
+    if args.no_warmup:
+        child_args.append("--no-warmup")
+    with tempfile.NamedTemporaryFile(suffix=".json", delete=False) as tmp:
+        out_path = tmp.name
+    child_args += ["--out", out_path]
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        try:
+            r = subprocess.run(child_args, env=env, capture_output=True, text=True,
+                               timeout=3600)
+        except (subprocess.TimeoutExpired, OSError) as e:
+            print(f"[multi-device] child did not finish: {e!r}")
+            return None
+        if r.returncode != 0:
+            print(f"[multi-device] child failed:\n{r.stderr[-2000:]}")
+            return None
+        with open(out_path) as fh:
+            return json.load(fh)["results"]
+    finally:
+        try:
+            os.unlink(out_path)
+        except OSError:
+            pass
 
 
 def main(argv=None) -> int:
@@ -189,14 +254,38 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-warmup", action="store_true")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="run the continuous engine tensor-parallel on a "
+                         "(n_dev/tp, tp) data x model mesh (0 = off)")
+    ap.add_argument("--no-multi-device", action="store_true",
+                    help="skip the 8-host-device --tp 2 subprocess row")
     ap.add_argument("--out", default="BENCH_serving.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="capped run for CI: bika only, 8 requests")
+                    help="capped run for CI: bika only, 8 requests, no "
+                         "multi-device row (CI runs its own 8-dev smoke)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.modes, args.requests, args.max_new = "bika", 8, 12
+        args.no_multi_device = True
 
-    results = {m: bench_mode(m, args) for m in args.modes.split(",")}
+    mesh = None
+    if args.tp > 0:
+        from repro.launch.serve import build_serve_mesh
+
+        mesh = build_serve_mesh(args.tp, "")
+        print(f"[serving_bench] mesh {dict(mesh.shape)}")
+
+    results = {m: bench_mode(m, args, mesh=mesh) for m in args.modes.split(",")}
+    multi = None
+    if mesh is None and not args.no_multi_device:
+        multi = multi_device_row(args)
+        if multi is not None:
+            for m, row in multi.items():
+                if m in results:
+                    results[m]["continuous_tp2"] = row["continuous"]
+                    base = results[m]["continuous"]["goodput_tok_s"]
+                    tp2 = row["continuous"]["goodput_tok_s"]
+                    results[m]["tp2_goodput_ratio"] = tp2 / base if base else None
     payload = {
         "bench": "serving",
         "arch": args.arch,
@@ -210,6 +299,11 @@ def main(argv=None) -> int:
         "engines": {"static": {"batch_size": args.batch_size},
                     "continuous": {"n_slots": args.n_slots}},
         "max_len": args.max_len,
+        "tp": args.tp or None,
+        "multi_device": (
+            {"forced_host_devices": 8, "mesh": {"data": 4, "model": 2},
+             "row": "continuous_tp2"} if multi is not None else None
+        ),
         "results": results,
     }
     with open(args.out, "w") as f:

@@ -3,6 +3,13 @@ weights, with streaming tokens and latency/goodput metrics.
 
     PYTHONPATH=src:. python examples/serve_lm.py --requests 6 --new-tokens 12
 
+Multi-device: ``--tp 2`` serves the same engine tensor-parallel on a
+data x model mesh (token-for-token identical outputs — DESIGN.md §5). On a
+CPU-only box, force host devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:. python examples/serve_lm.py --tp 2
+
 The three-line quickstart (DESIGN.md §4):
 
     eng = ServeEngine(api, params, arch, n_slots=4, max_len=64)   # auto -> continuous
@@ -32,7 +39,13 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--engine", default="auto", choices=("auto", "static", "continuous"))
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel size over the local devices (0 = off)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="explicit 'data,model' mesh shape (overrides --tp)")
     args = ap.parse_args()
+    from repro.launch.serve import build_serve_mesh
+    mesh = build_serve_mesh(args.tp, args.mesh_shape)
 
     arch = get_smoke("smollm-360m", compute_mode="bika", remat=False).replace(
         pack_signs=True)
@@ -42,8 +55,10 @@ def main():
           f"(~9 bits/edge: the paper's resource story on TPU HBM)")
 
     eng = ServeEngine(api, params, arch, batch_size=args.n_slots,
-                      n_slots=args.n_slots, max_len=64, engine=args.engine)
-    print(f"engine: {eng.engine}")
+                      n_slots=args.n_slots, max_len=64, engine=args.engine,
+                      mesh=mesh)
+    print(f"engine: {eng.engine}"
+          + (f"  mesh: {dict(mesh.shape)}" if mesh is not None else ""))
     rng = np.random.RandomState(0)
     streams = {}
     for i in range(args.requests):

@@ -37,6 +37,9 @@ __all__ = [
     "batch_sharding",
     "zero1_shardings",
     "mesh_axis_size",
+    "api_param_shardings",
+    "replicated_sharding",
+    "kv_cache_shardings",
 ]
 
 # Default tensor-parallel rule table. Entries may map one logical axis to a
@@ -143,6 +146,41 @@ def param_shardings(mesh: Mesh, boxed_params, rules: ShardingRules = ShardingRul
         return named_sharding(mesh, p.axes, rules, _shape_of(p.value))
 
     return jax.tree_util.tree_map(one, boxed_params, is_leaf=lambda x: isinstance(x, P))
+
+
+def api_param_shardings(mesh: Mesh, api, rules: ShardingRules = ShardingRules()):
+    """NamedShardings for a ModelAPI's (unboxed) param tree: abstract-init
+    the boxed tree (P leaves carry the logical axes) and map it through
+    ``param_shardings``. What the serving runtime uses to place checkpoints
+    it receives as plain value trees."""
+    boxed = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    return param_shardings(mesh, boxed, rules)
+
+
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """Fully-replicated placement on ``mesh`` (host scalars, token ids,
+    per-slot positions — everything the serving runtime keeps tiny)."""
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def kv_cache_shardings(mesh: Mesh, cache, rules: ShardingRules = ShardingRules()):
+    """NamedShardings for a serving KV cache pytree (the ``models/base.py``
+    ``KVCacheLayout`` contract: every leaf ``(layers, slots, max_len,
+    kv_heads, hd)``, scale leaves with a trailing 1).
+
+    Only the ``kv_heads`` dim maps to a mesh axis (``model`` under the
+    default rules), so each device owns whole attention heads for every slot
+    and position — the slot splice and the per-row decode scatter stay
+    device-local. A head count that does not divide the mapped axes falls
+    back to replication per leaf (the standard divisibility fallback), so a
+    GQA cache with e.g. 1 kv head serves on any mesh unchanged.
+    """
+    from repro.models.base import KV_CACHE_LOGICAL_AXES
+
+    def one(leaf):
+        return named_sharding(mesh, KV_CACHE_LOGICAL_AXES, rules, tuple(leaf.shape))
+
+    return jax.tree_util.tree_map(one, cache)
 
 
 def batch_sharding(mesh: Mesh, ndim: int = 2, batch_dim: int = 0,

@@ -74,6 +74,11 @@ _BASE: Dict[str, Dict[str, int]] = {
 # keep the f32 K-depth rules.
 _INT_PATHS = ("qnn8", "qnn")
 
+# current path -> pre-registry alias it may still be cached under on disk.
+# Measured-cache lookups consult the alias when the canonical key misses,
+# so entries tuned before the registry rename keep being honored.
+_LEGACY_PATH_ALIASES = {"qnn8": "qnn"}
+
 _SUBLANE, _LANE = 8, 128  # f32 min tile (sublane x lane)
 
 
@@ -207,7 +212,10 @@ def get_blocks(
     result is clamped to legal tile sizes for the padded problem."""
     bl = heuristic_blocks(m, k, n, path)
     if use_cache:
-        hit = _load_cache().get(_cache_key(path, m, k, n))
+        cached = _load_cache()
+        hit = cached.get(_cache_key(path, m, k, n))
+        if hit is None and path in _LEGACY_PATH_ALIASES:
+            hit = cached.get(_cache_key(_LEGACY_PATH_ALIASES[path], m, k, n))
         if hit:
             bl.update(hit)
     sub = None

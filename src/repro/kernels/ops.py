@@ -10,6 +10,20 @@ table + optional measured cache), and every wrapper — including
 
 ``interpret=None`` auto-selects interpret mode off-TPU, so the same call
 sites run on CPU tests and TPU deployments.
+
+Tensor parallelism: when an active mesh carries a ``model`` axis of size > 1
+(the serving engine enters ``with mesh:`` around its jitted programs), the
+SERVE-path wrappers (``cac_matmul`` / ``bnn_matmul`` / ``bnn_matmul_packed``
+/ ``qnn_matmul``) route the contraction through ``shard_map``
+column-parallel: weights split on their output (N) dim, activations
+replicated, each device running the unmodified kernel on its N-shard. No
+cross-device reduction is introduced, so per-column sums keep the exact
+single-device accumulation order — sharded outputs are bit-identical to the
+unsharded kernel. When N does not divide the model axis the wrapper falls
+back to the pure-XLA reference (kernels/ref.py), which GSPMD partitions
+freely. Training routes keep plain GSPMD partitioning (shard_map + custom
+VJP replication bookkeeping is not worth it for paths the trainer already
+shards well).
 """
 from __future__ import annotations
 
@@ -18,8 +32,10 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec
 
-from . import autotune
+from . import autotune, ref
 from .bnn_matmul import (
     bnn_bwd_dw_call,
     bnn_bwd_dx_call,
@@ -57,6 +73,50 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return interpret
 
 
+# ---------------------------------------------------------------------------
+# Tensor-parallel dispatch (serve paths)
+# ---------------------------------------------------------------------------
+
+TP_AXIS = "model"
+
+
+def _tp_mesh():
+    """The active mesh when it tensor-parallelizes (model axis > 1), else
+    None. Late-bound off the thread-resource env like nn's ``constrain`` —
+    call sites inside jit pick it up from the caller's ``with mesh:``."""
+    from repro.distributed.constraints import _context_mesh
+
+    mesh = _context_mesh()
+    if mesh is None or int(mesh.shape.get(TP_AXIS, 1)) <= 1:
+        return None
+    return mesh
+
+
+def _tp_shard_call(impl, ref_impl, x2: jax.Array, weights: Tuple[jax.Array, ...],
+                   n: int) -> jax.Array:
+    """Run ``impl(x2, *weights) -> (M, N)`` column-parallel over the model
+    axis when a TP mesh is active: every weight operand splits on its last
+    (N) dim, ``x2`` is replicated, and the output stays N-sharded for the
+    next layer to consume. Each shard runs the unmodified Pallas kernel on
+    its (M, K, N/tp) slice — no reduction is split, so the result is
+    bit-identical to the single-device kernel. Falls back to ``ref_impl``
+    (pure XLA, GSPMD-partitionable) when N does not divide the axis."""
+    mesh = _tp_mesh()
+    if mesh is None:
+        return impl(x2, *weights)
+    if n % int(mesh.shape[TP_AXIS]) != 0:
+        return ref_impl(x2, *weights)
+    wspec = PartitionSpec(None, TP_AXIS)
+    fn = shard_map(
+        impl,
+        mesh=mesh,
+        in_specs=(PartitionSpec(),) + (wspec,) * len(weights),
+        out_specs=PartitionSpec(None, TP_AXIS),
+        check_rep=False,
+    )
+    return fn(x2, *weights)
+
+
 def _round_up(v: int, b: int) -> int:
     return -(-v // b) * b
 
@@ -80,6 +140,22 @@ def _flatten(x: jax.Array) -> Tuple[jax.Array, Tuple[int, ...]]:
     return x.reshape(-1, x.shape[-1]), lead
 
 
+def _cac_hw_impl(x2, tau, s, *, interpret: bool, blocks) -> jax.Array:
+    m, k = x2.shape
+    n = tau.shape[1]
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "hw_fwd", blocks)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = _pad_axis(x2, 0, mp)
+    x2 = _pad_axis(x2, 1, kp)
+    tau_p = _pad_axis(_pad_axis(tau, 0, kp), 1, np_)
+    s_p = _pad_axis(_pad_axis(s, 0, kp, value=0), 1, np_)  # s=0 pad -> zero contribution
+    y = cac_matmul_kernel_call(
+        x2, tau_p, s_p, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
+        interpret=interpret,
+    )
+    return y[:m, :n]
+
+
 def cac_matmul(
     x: jax.Array,
     tau: jax.Array,
@@ -91,21 +167,14 @@ def cac_matmul(
     """Hardware-form CAC. x: (..., K); tau, s: (K, N) -> (..., N) fp32.
 
     Padding scheme: K rows padded with s = 0 contribute exactly 0; M rows and
-    N cols are sliced away after the call."""
+    N cols are sliced away after the call. Under an active TP mesh the call
+    runs column-parallel via shard_map (see module docstring)."""
     x2, lead = _flatten(x)
-    m, k = x2.shape
     n = tau.shape[1]
-    bm, bn, bk, bks = _resolve_blocks(m, k, n, "hw_fwd", blocks)
-    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    x2 = _pad_axis(x2, 0, mp)
-    x2 = _pad_axis(x2, 1, kp)
-    tau_p = _pad_axis(_pad_axis(tau, 0, kp), 1, np_)
-    s_p = _pad_axis(_pad_axis(s, 0, kp, value=0), 1, np_)  # s=0 pad -> zero contribution
-    y = cac_matmul_kernel_call(
-        x2, tau_p, s_p, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
-        interpret=_auto_interpret(interpret),
-    )
-    return y[:m, :n].reshape(lead + (n,))
+    impl = functools.partial(_cac_hw_impl, interpret=_auto_interpret(interpret),
+                             blocks=blocks)
+    y = _tp_shard_call(impl, ref.cac_matmul_ref, x2, (tau, s), n)
+    return y.reshape(lead + (n,))
 
 
 # ---------------------------------------------------------------------------
@@ -219,10 +288,40 @@ def _bnn_fwd_padded(x2, w, interpret, blocks):
 def bnn_matmul(x: jax.Array, w: jax.Array, *, interpret: Optional[bool] = None,
                **blocks) -> jax.Array:
     """sign(x) @ sign(w). Padding: padded K rows give sign(0)=+1 on both
-    operands -> each pad row adds +1; subtract the constant."""
+    operands -> each pad row adds +1; subtract the constant. TP meshes run
+    it column-parallel (see module docstring)."""
     x2, lead = _flatten(x)
-    y = _bnn_fwd_padded(x2, w, _auto_interpret(interpret), blocks)
+    impl = functools.partial(_bnn_fwd_padded, interpret=_auto_interpret(interpret),
+                             blocks=blocks)
+    y = _tp_shard_call(impl, ref.bnn_matmul_ref, x2, (w,), w.shape[1])
     return y.reshape(lead + (w.shape[1],))
+
+
+def _bnn_packed_impl(x2, wp, *, interpret: bool, blocks) -> jax.Array:
+    m, k = x2.shape
+    k8, n = wp.shape
+    assert k == 8 * k8, f"x K={k} must equal 8 * packed rows ({k8})"
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "bnn", dict(blocks))
+    bk = max((min(bk, k) // 8) * 8, 8)  # K grid steps slice whole bytes
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wpp = _pad_axis(_pad_axis(wp, 0, kp // 8), 1, np_)
+    y = bnn_packed_matmul_kernel_call(
+        xp, wpp, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
+        interpret=interpret,
+    )
+    y = y[:m, :n]
+    if kp - k:
+        y = y + jnp.float32(kp - k)
+    return y
+
+
+def _bnn_packed_ref(x2, wp):
+    """XLA fallback for the packed serve kernel: unpack, then the sign-matmul
+    reference (bit-exact: ±1 partial sums are integers in fp32)."""
+    from repro.core.backend import unpack_signs
+
+    return ref.bnn_matmul_ref(x2, unpack_signs(wp, 8 * wp.shape[0]).astype(jnp.float32))
 
 
 def bnn_matmul_packed(x: jax.Array, wp: jax.Array, *,
@@ -236,21 +335,10 @@ def bnn_matmul_packed(x: jax.Array, wp: jax.Array, *,
     unpacks to eight -1 weights against sign(0) = +1 activations, so each
     padded K row contributes -1 — add the constant back."""
     x2, lead = _flatten(x)
-    m, k = x2.shape
-    k8, n = wp.shape
-    assert k == 8 * k8, f"x K={k} must equal 8 * packed rows ({k8})"
-    bm, bn, bk, bks = _resolve_blocks(m, k, n, "bnn", dict(blocks))
-    bk = max((min(bk, k) // 8) * 8, 8)  # K grid steps slice whole bytes
-    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
-    wpp = _pad_axis(_pad_axis(wp, 0, kp // 8), 1, np_)
-    y = bnn_packed_matmul_kernel_call(
-        xp, wpp, block_m=bm, block_n=bn, block_k=bk, block_k_sub=bks,
-        interpret=_auto_interpret(interpret),
-    )
-    y = y[:m, :n]
-    if kp - k:
-        y = y + jnp.float32(kp - k)
+    n = wp.shape[1]
+    impl = functools.partial(_bnn_packed_impl, interpret=_auto_interpret(interpret),
+                             blocks=blocks)
+    y = _tp_shard_call(impl, _bnn_packed_ref, x2, (wp,), n)
     return y.reshape(lead + (n,))
 
 
@@ -303,6 +391,19 @@ def bnn_train_matmul(x: jax.Array, w: jax.Array, *,
     return y.reshape(lead + (w.shape[1],))
 
 
+def _qnn_impl(x2, w_int, w_scale, *, x_scale: float, interpret: bool, blocks):
+    m, k = x2.shape
+    n = w_int.shape[1]
+    bm, bn, bk, bks = _resolve_blocks(m, k, n, "qnn8", blocks)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
+    wp = _pad_axis(_pad_axis(w_int, 0, kp), 1, np_)
+    sp = _pad_axis(w_scale.reshape(1, -1), 1, np_)
+    y = qnn_matmul_kernel_call(xp, wp, sp, x_scale, block_m=bm, block_n=bn,
+                               block_k=bk, block_k_sub=bks, interpret=interpret)
+    return y[:m, :n]
+
+
 def qnn_matmul(
     x_int: jax.Array,
     w_int: jax.Array,
@@ -312,19 +413,16 @@ def qnn_matmul(
     interpret: Optional[bool] = None,
     **blocks,
 ) -> jax.Array:
-    """int8 matmul + dequant. Zero padding is exact for integer dot."""
+    """int8 matmul + dequant. Zero padding is exact for integer dot. TP
+    meshes run it column-parallel (see module docstring)."""
     x2, lead = _flatten(x_int)
-    m, k = x2.shape
     n = w_int.shape[1]
-    bm, bn, bk, bks = _resolve_blocks(m, k, n, "qnn8", blocks)
-    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
-    xp = _pad_axis(_pad_axis(x2, 0, mp), 1, kp)
-    wp = _pad_axis(_pad_axis(w_int, 0, kp), 1, np_)
-    sp = _pad_axis(w_scale.reshape(1, -1), 1, np_)
-    y = qnn_matmul_kernel_call(xp, wp, sp, x_scale, block_m=bm, block_n=bn,
-                               block_k=bk, block_k_sub=bks,
-                               interpret=_auto_interpret(interpret))
-    return y[:m, :n].reshape(lead + (n,))
+    w_scale = w_scale.reshape(1, -1)  # rank-2 so the TP spec splits its N dim
+    impl = functools.partial(_qnn_impl, x_scale=x_scale,
+                             interpret=_auto_interpret(interpret), blocks=blocks)
+    ref_impl = lambda xi, wi, ws: ref.qnn_matmul_ref(xi, wi, x_scale, ws)
+    y = _tp_shard_call(impl, ref_impl, x2, (w_int, w_scale), n)
+    return y.reshape(lead + (n,))
 
 
 # ---------------------------------------------------------------------------

@@ -8,6 +8,13 @@ drain a synthetic request stream through either engine.
 process instead of submitting everything up front: the launcher ticks the
 slot scheduler and admits each request when its arrival time elapses —
 the same open-loop load shape as benchmarks/serving_bench.py.
+
+``--tp N`` serves tensor-parallel on a (n_devices/N, N) data x model mesh
+built from the local devices (``--mesh-shape d,m`` pins an explicit shape):
+params go out under ``param_shardings``, the KV pool shards kv_heads over
+the model axis, and outputs stay token-for-token identical to 1-device
+serving (DESIGN.md §5). CPU smoke: prefix with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
 """
 from __future__ import annotations
 
@@ -21,6 +28,24 @@ from repro.models import build_model
 from repro.nn.module import param_bytes, unbox
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.scheduler import replay_arrivals
+
+
+def build_serve_mesh(tp: int, mesh_shape: str):
+    """Mesh from the CLI flags (None when both are unset): ``--mesh-shape
+    d,m`` wins; otherwise ``--tp N`` uses every local device as (n//N, N)."""
+    from repro.distributed.meshes import make_mesh
+
+    if mesh_shape:
+        shape = tuple(int(v) for v in mesh_shape.split(","))
+        if len(shape) != 2:
+            raise SystemExit(f"--mesh-shape wants 'data,model', got {mesh_shape!r}")
+        return make_mesh(shape, ("data", "model"))
+    if tp > 0:
+        n = len(jax.devices())
+        if n % tp:
+            raise SystemExit(f"--tp {tp} does not divide the {n} local devices")
+        return make_mesh((n // tp, tp), ("data", "model"))
+    return None
 
 
 def main(argv=None) -> int:
@@ -38,7 +63,13 @@ def main(argv=None) -> int:
                     help="continuous decode slots (0 -> batch-size)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = submit all up front)")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel size: serve on a (n_dev/tp, tp) "
+                         "data x model mesh (0 = single device)")
+    ap.add_argument("--mesh-shape", default="",
+                    help="explicit 'data,model' mesh shape (overrides --tp)")
     args = ap.parse_args(argv)
+    mesh = build_serve_mesh(args.tp, args.mesh_shape)
 
     getter = get_smoke if args.smoke else get_config
     arch = getter(args.arch, compute_mode=args.mode, remat=False)
@@ -50,8 +81,9 @@ def main(argv=None) -> int:
 
     eng = ServeEngine(api, params, arch, batch_size=args.batch_size,
                       max_len=args.max_len, quantized_kv=args.quantized_kv,
-                      engine=args.engine, n_slots=args.n_slots or None)
-    print(f"[serve] engine={eng.engine}")
+                      engine=args.engine, n_slots=args.n_slots or None, mesh=mesh)
+    mesh_note = (f" mesh={dict(mesh.shape)}" if mesh is not None else "")
+    print(f"[serve] engine={eng.engine}{mesh_note}")
     rng = np.random.RandomState(0)
     extra = None
     if arch.family == "encdec":

@@ -16,6 +16,7 @@ from repro.nn.module import P, unbox
 __all__ = [
     "ArchConfig",
     "KVCacheLayout",
+    "KV_CACHE_LOGICAL_AXES",
     "ModelAPI",
     "kv_cache_layout",
     "stack_layers",
@@ -39,6 +40,15 @@ class KVCacheLayout(NamedTuple):
     max_len: int
     n_kv_heads: int
     head_dim: int
+
+
+# Logical sharding axes of the KV layout contract, one per rank-5 dim. Only
+# ``kv_heads`` maps to a mesh axis (tensor parallelism shards attention by
+# head); layers/slots/positions stay local so slot splice + per-row decode
+# writes never cross devices. ``distributed.sharding.kv_cache_shardings``
+# binds these names to a mesh with the standard divisibility fallback
+# (a head count that does not divide the model axis replicates instead).
+KV_CACHE_LOGICAL_AXES = ("layers", None, None, "kv_heads", None)
 
 
 def kv_cache_layout(cache) -> KVCacheLayout:

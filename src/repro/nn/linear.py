@@ -25,6 +25,17 @@ and forward. New backends plug in by registering in core/backend.py alone
 (DESIGN.md §3). ``blocks`` forwards Pallas block-size overrides to backends
 whose ``spec.impl == 'pallas'`` routes (None = autotuned via
 kernels/autotune.py).
+
+Tensor parallelism (DESIGN.md §5): the dispatcher itself is mesh-oblivious —
+a projection parallelizes through its *parameters*. ``linear_init`` boxes
+every weight with logical axes (``axes=(in, out)``), so
+``distributed.sharding.param_shardings`` splits the out dim over the
+``model`` mesh axis; XLA-path backends (dense, the fused/cvjp quantized
+forwards) then partition column-parallel under GSPMD, and the Pallas serve
+routes detect the active mesh inside ``kernels/ops.py`` and shard_map the
+unmodified kernel over N (bit-identical to one device; XLA-reference
+fallback when N does not divide the axis). Nothing here needs a mesh
+argument — serving and training shard the same projections the same way.
 """
 from __future__ import annotations
 
@@ -39,7 +50,7 @@ from repro.core import backend as _backend
 from repro.core.backend import LinearSpec, pack_signs, unpack_signs
 
 __all__ = ["LinearSpec", "linear_init", "linear_apply", "linear_to_serve",
-           "pack_signs"]
+           "pack_signs", "unpack_signs"]
 
 # Back-compat alias: pre-registry code imported the unpacker privately.
 _unpack_signs = unpack_signs

@@ -14,13 +14,34 @@ def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
 
 
 def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
-    """x: (..., S, H, D); positions: broadcastable to (..., S) int32."""
+    """x: (..., S, H, D); positions: broadcastable to (..., S) int32.
+
+    Rotate-half is assembled as ``x * cos + roll(x, D/2) * (sign * sin)``
+    with the cos/sin/sign tables built *elementwise over the full D axis* —
+    deliberately NO slice+concatenate along D. The classic
+    ``concat(x1 cos - x2 sin, x2 cos + x1 sin)`` form is bit-identical on
+    one device (same multiplies; ``a + b*(-s) == a - b*s`` in IEEE) but
+    miscompiles under GSPMD when the D axis arrives sharded: XLA CPU SPMD
+    (observed on jax 0.4.37) lowers a concatenate whose output is
+    partitioned along the concat dimension incorrectly, which hits exactly
+    the tensor-parallel case where a KV projection's flattened heads*D dim
+    splits inside a head. ``jnp.roll`` and elementwise iota/where partition
+    correctly, so sharded serving/training stay exact however the
+    projection was split (tests/test_serving_sharded.py).
+    """
     d = x.shape[-1]
-    inv = rope_freqs(d, theta)  # (D/2,)
-    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, D/2)
-    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, D/2)
-    sin = jnp.sin(ang)[..., None, :]
-    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
-    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
-    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    # inv_full[j] = 1 / theta^(2 (j mod D/2) / D): both rotate-half copies of
+    # rope_freqs, computed elementwise (bit-identical to the concat form —
+    # the exponent arithmetic is exact small-int math in fp32)
+    j = jnp.arange(d, dtype=jnp.float32)
+    half = jnp.float32(d // 2)
+    exponents = jnp.where(j < half, j, j - half) * 2.0 / d
+    inv_full = 1.0 / (theta**exponents)  # (D,)
+    ang = positions[..., None].astype(jnp.float32) * inv_full  # (..., S, D)
+    cos_full = jnp.cos(ang)[..., None, :]  # (..., S, 1, D)
+    sin_full = jnp.sin(ang)[..., None, :]
+    sign = jnp.where(j < half, -1.0, 1.0).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    rolled = jnp.roll(xf, d // 2, axis=-1)  # [x2, x1] along D
+    out = xf * cos_full + rolled * (sign * sin_full)
     return out.astype(x.dtype)

@@ -16,9 +16,18 @@ decode masks KV positions ``>= valid_len`` per row.
 The emitted cache is padded to the pool's full ``max_len`` (leaves
 ``(L, 1, max_len, ...)``), so the slot splice in serve/kv.py has a single
 shape regardless of bucket.
+
+With ``mesh=`` the per-bucket programs pin their in/out placements: params
+arrive under ``param_shardings``, tokens/last_index replicated, the emitted
+cache under the KV layout contract (``kv_heads`` over the ``model`` axis,
+divisibility fallback to replication) and the logits replicated. Explicit
+shardings mean a request whose operands arrive placed differently is
+resharded, not recompiled — the one-compile-per-bucket guarantee survives
+sharded inputs.
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -48,14 +57,39 @@ class BucketedPrefill:
     """
 
     def __init__(self, api, *, max_len: int, quantized: bool = False,
-                 min_bucket: int = 16):
+                 min_bucket: int = 16, mesh=None, rules=None,
+                 param_sh=None):
         self.api = api
         self.max_len = max_len
         self.quantized = quantized
         self.min_bucket = min_bucket
+        self.mesh = mesh
         self._fns: Dict[Tuple[int, int], Callable] = {}
         self.hits = 0
         self.misses = 0
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                ShardingRules, api_param_shardings, replicated_sharding,
+            )
+            from repro.nn.module import unbox
+
+            self.rules = rules if rules is not None else ShardingRules()
+            self._param_sh = (param_sh if param_sh is not None
+                              else api_param_shardings(mesh, api, self.rules))
+            self._rep = replicated_sharding(mesh)
+            # unboxed ShapeDtypeStruct tree of the params — abstract-traced
+            # once here, reused to eval_shape every bucket's output layout
+            self._param_struct = unbox(jax.eval_shape(api.init, jax.random.PRNGKey(0)))
+        else:
+            self.rules = rules
+            self._param_sh = None
+            self._rep = None
+            self._param_struct = None
+
+    def _mesh_ctx(self):
+        """Activate the mesh while tracing/running so in-model constraints
+        and the TP kernel routes see it; identity off-mesh."""
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     @property
     def compiled_buckets(self) -> List[Tuple[int, int]]:
@@ -79,7 +113,24 @@ class BucketedPrefill:
                 quantized=self.quantized, last_index=last_index,
             )
 
-        fn = jax.jit(prefill)
+        if self.mesh is None:
+            fn = jax.jit(prefill)
+        else:
+            from repro.distributed.sharding import kv_cache_shardings
+
+            with self._mesh_ctx():
+                out_struct = jax.eval_shape(
+                    prefill,
+                    self._param_struct,
+                    jax.ShapeDtypeStruct((batch, bucket), jnp.int32),
+                    jax.ShapeDtypeStruct((batch,), jnp.int32),
+                )
+            cache_sh = kv_cache_shardings(self.mesh, out_struct[1], self.rules)
+            fn = jax.jit(
+                prefill,
+                in_shardings=(self._param_sh, self._rep, self._rep),
+                out_shardings=(self._rep, cache_sh),
+            )
         self._fns[key] = fn
         return fn
 
@@ -91,7 +142,8 @@ class BucketedPrefill:
         bucket = self.bucket_for(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = prompt  # right-pad: exact under causal attention
-        logits, cache = self.fn(bucket, 1)(
-            params, jnp.asarray(toks), jnp.asarray([plen - 1], jnp.int32)
-        )
+        with self._mesh_ctx():
+            logits, cache = self.fn(bucket, 1)(
+                params, jnp.asarray(toks), jnp.asarray([plen - 1], jnp.int32)
+            )
         return logits, cache

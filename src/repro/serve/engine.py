@@ -27,9 +27,17 @@ float checkpoint through the QuantBackend registry (``core.convert.
 tree_to_serve``) and builds the serve-phase model around it, so ANY
 registered quantized mode (including future ones) deploys through the same
 two lines.
+
+``mesh=`` (+ optional ``rules=``) tensor-parallelizes either engine across a
+device mesh: params are placed with ``param_shardings``, KV caches shard
+``kv_heads`` over the ``model`` axis per the layout contract, the jitted
+programs pin explicit in/out NamedShardings, and the Pallas kernel routes
+run column-parallel under shard_map (kernels/ops.py) — outputs stay
+token-for-token identical to the single-device engine (DESIGN.md §5).
 """
 from __future__ import annotations
 
+import contextlib
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -62,13 +70,16 @@ class ServeEngine:
         engine: str = "auto",
         n_slots: Optional[int] = None,
         min_bucket: int = 16,
+        mesh=None,
+        rules=None,
     ):
         self.api = api
-        self.params = params
         self.arch = arch
         self.batch_size = batch_size
         self.max_len = max_len
         self.quantized_kv = quantized_kv
+        self.mesh = mesh
+        self.rules = rules
         if engine not in ("auto", "static", "continuous"):
             raise ValueError(f"unknown engine {engine!r}")
         if engine == "auto":
@@ -82,12 +93,47 @@ class ServeEngine:
                 max_len=max_len,
                 quantized_kv=quantized_kv,
                 min_bucket=min_bucket,
+                mesh=mesh,
+                rules=rules,
             )
-        self._prefill = jax.jit(
-            lambda p, batch: api.prefill(p, batch, max_len=max_len, quantized=quantized_kv)
-        )
-        self._decode = jax.jit(api.decode_step, donate_argnums=(2,))
+            params = self.scheduler.params  # already mesh-placed
+        prefill = lambda p, batch: api.prefill(p, batch, max_len=max_len,
+                                               quantized=quantized_kv)
+        if mesh is None:
+            self._prefill = jax.jit(prefill)
+            self._decode = jax.jit(api.decode_step, donate_argnums=(2,))
+        else:
+            from repro.distributed.sharding import (
+                ShardingRules, api_param_shardings, named_sharding,
+                replicated_sharding,
+            )
+            from repro.models.base import KV_CACHE_LOGICAL_AXES
+
+            self.rules = rules = rules if rules is not None else ShardingRules()
+            param_sh = (self.scheduler._param_sh if self.scheduler is not None
+                        else api_param_shardings(mesh, api, rules))
+            rep = replicated_sharding(mesh)
+            if arch.family == "lm" and arch.window is None:
+                # static packed cache follows the KV layout contract: one
+                # spec prefix covers every leaf (kv_heads dim is shared)
+                cache_sh = named_sharding(
+                    mesh, KV_CACHE_LOGICAL_AXES, rules,
+                    (arch.n_layers, batch_size, max_len, arch.n_kv_heads, arch.hd),
+                )
+            else:
+                cache_sh = rep  # recurrent/ring caches: replicate
+            if self.scheduler is None:
+                params = jax.device_put(params, param_sh)
+            self._prefill = jax.jit(prefill, in_shardings=(param_sh, rep),
+                                    out_shardings=(rep, cache_sh))
+            self._decode = jax.jit(api.decode_step, donate_argnums=(2,),
+                                   in_shardings=(param_sh, rep, cache_sh, rep),
+                                   out_shardings=(rep, cache_sh))
+        self.params = params
         self.queue: List[Request] = []
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
     @classmethod
     def from_trained(
@@ -160,7 +206,8 @@ class ServeEngine:
         batch = {"tokens": tokens}
         if extra_batch:
             batch.update(self._slice_extra(extra_batch, len(reqs)))
-        logits, cache = self._prefill(self.params, batch)
+        with self._mesh_ctx():
+            logits, cache = self._prefill(self.params, batch)
         tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
         # decode writes go to positions s .. s+n_steps-2; cap the loop at the
         # KV cache end instead of silently wrapping/corrupting row max_len-1
@@ -176,7 +223,8 @@ class ServeEngine:
             if finished.all():
                 break
             pos = jnp.asarray(s + t - 1, jnp.int32)
-            logits, cache = self._decode(self.params, tok, cache, pos)
+            with self._mesh_ctx():
+                logits, cache = self._decode(self.params, tok, cache, pos)
             tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
             cur = np.asarray(tok)[:, 0]
             self._stream(reqs, cur, finished, t, need)

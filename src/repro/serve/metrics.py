@@ -19,6 +19,7 @@ Definitions (DESIGN.md §4):
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
 __all__ = ["RequestMetrics", "RunMetrics"]
@@ -57,11 +58,19 @@ class RequestMetrics:
 
 
 def _percentile(sorted_vals: List[float], q: float) -> float:
-    """Nearest-rank percentile on an already-sorted list."""
+    """Ceil-based nearest-rank percentile on an already-sorted list.
+
+    ``round(q * (n - 1))`` rounds half-to-even, which biases small-n tail
+    percentiles LOW (p50 of 2 samples returned the min; p95 of 20 returned
+    the 19th of 20). Taking the ceiling of the fractional rank always picks
+    the first value whose rank covers q — conservative (never under-reports
+    a latency percentile). The 1e-9 shave keeps exact integer ranks (e.g.
+    q=0.5, n=5 -> 2.0) from being pushed up a slot by fp noise.
+    """
     if not sorted_vals:
         return 0.0
-    idx = min(len(sorted_vals) - 1, max(0, int(round(q * (len(sorted_vals) - 1)))))
-    return sorted_vals[idx]
+    rank = math.ceil(q * (len(sorted_vals) - 1) - 1e-9)
+    return sorted_vals[min(len(sorted_vals) - 1, max(0, rank))]
 
 
 @dataclasses.dataclass

@@ -24,9 +24,19 @@ Supported families: attention-KV models (``family == "lm"``) without MoE.
 Recurrent state (hybrid/xlstm) cannot be right-pad-bucketed (pad tokens
 corrupt the state), and MoE capacity routing couples batch rows, which both
 breaks bit-exactness and would let junk rows steal expert capacity.
+
+Multi-device: pass ``mesh=`` (+ optional ``rules=``) and the whole runtime
+tensor-parallelizes — params placed with ``param_shardings``, the KV slot
+pool sharded ``kv_heads``-over-``model`` per the layout contract, and the
+jitted tick / bucketed prefill / slot splice all pinning explicit in/out
+NamedShardings so the one-compile-per-shape guarantee survives sharded
+inputs (DESIGN.md §5). Scheduling state (tokens, positions, the queue)
+stays host-side and replicated: scheduling decisions are identical on every
+device, so outputs are token-for-token the single-device outputs.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from functools import partial
@@ -82,6 +92,8 @@ class SlotScheduler:
         quantized_kv: bool = False,
         min_bucket: int = 16,
         clock: Callable[[], float] = time.monotonic,
+        mesh=None,
+        rules=None,
     ):
         if not scheduler_supports(arch):
             raise ValueError(
@@ -90,16 +102,37 @@ class SlotScheduler:
                 f"(use the static engine)"
             )
         self.api = api
-        self.params = params
         self.arch = arch
         self.n_slots = n_slots
         self.max_len = max_len
         self.clock = clock
-        self.kv = KVSlotManager(api, n_slots=n_slots, max_len=max_len, quantized=quantized_kv)
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed.sharding import (
+                ShardingRules, api_param_shardings, replicated_sharding,
+            )
+
+            self.rules = rules if rules is not None else ShardingRules()
+            self._param_sh = api_param_shardings(mesh, api, self.rules)
+            self._rep = replicated_sharding(mesh)
+            params = jax.device_put(params, self._param_sh)
+        else:
+            self.rules = rules
+            self._param_sh = None
+            self._rep = None
+        self.params = params
+        self.kv = KVSlotManager(api, n_slots=n_slots, max_len=max_len,
+                                quantized=quantized_kv, mesh=mesh, rules=self.rules)
         self.prefill = BucketedPrefill(
-            api, max_len=max_len, quantized=quantized_kv, min_bucket=min_bucket
+            api, max_len=max_len, quantized=quantized_kv, min_bucket=min_bucket,
+            mesh=mesh, rules=self.rules, param_sh=self._param_sh,
         )
         self.metrics = RunMetrics(n_slots=n_slots)
+        # prefill-compile counter at the start of the current metrics window:
+        # BucketedPrefill.misses is cumulative across the scheduler's life,
+        # so a timed window must report the delta, not the total (otherwise
+        # warmup-run compiles leak into the timed report).
+        self._prefill_miss_base = self.prefill.misses
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self._slots: List[Optional[_SlotState]] = [None] * n_slots
@@ -107,15 +140,28 @@ class SlotScheduler:
         self._pos = np.zeros(n_slots, np.int32)  # cache position of the NEXT write
         self._tick_fn = self._build_tick()
 
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
     def _build_tick(self):
         decode = self.api.decode_step
 
-        @partial(jax.jit, donate_argnums=(1,))
         def tick(params, cache, tok, pos):
             logits, cache = decode(params, tok[:, None], cache, pos)
             return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
 
-        return tick
+        if self.mesh is None:
+            return jax.jit(tick, donate_argnums=(1,))
+        # pinned in/out placements: params under param_shardings, the slot
+        # cache under the KV layout contract (donated in place), next-token
+        # ids and per-slot positions replicated — so the one tick program
+        # keeps its single signature no matter how operands arrive placed
+        return jax.jit(
+            tick,
+            donate_argnums=(1,),
+            in_shardings=(self._param_sh, self.kv._cache_sh, self._rep, self._rep),
+            out_shardings=(self._rep, self.kv._cache_sh),
+        )
 
     # -- queue --------------------------------------------------------------
 
@@ -129,8 +175,15 @@ class SlotScheduler:
 
     def reset_metrics(self) -> None:
         """Start a fresh RunMetrics window (aggregates are otherwise
-        cumulative across run() calls — e.g. warmup + timed run)."""
+        cumulative across run() calls — e.g. warmup + timed run). Snapshots
+        the prefill-compile counter so the new window reports only compiles
+        it actually triggered."""
         self.metrics = RunMetrics(n_slots=self.n_slots)
+        self._prefill_miss_base = self.prefill.misses
+
+    def window_prefill_compiles(self) -> int:
+        """Bucketed-jit cache misses since the current metrics window began."""
+        return self.prefill.misses - self._prefill_miss_base
 
     def submit(self, req: Request) -> None:
         plen = len(req.prompt)
@@ -197,9 +250,10 @@ class SlotScheduler:
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return False
-        nxt, self.kv.cache = self._tick_fn(
-            self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
-        )
+        with self._mesh_ctx():
+            nxt, self.kv.cache = self._tick_fn(
+                self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
+            )
         nxt = np.asarray(nxt)
         self.metrics.record_step(len(active))
         for i in active:
@@ -224,7 +278,7 @@ class SlotScheduler:
         while self.has_work:
             self.tick()
         self.metrics.t_end = self.clock()
-        self.metrics.prefill_compiles = self.prefill.misses
+        self.metrics.prefill_compiles = self.window_prefill_compiles()
         done, self.completed = self.completed, []
         return done
 
@@ -263,6 +317,6 @@ def replay_arrivals(
             sleep(max(0.0, pending[0][0] - (clock() - t0)))
     t_end = clock()
     sched.metrics.t_end = t_end
-    sched.metrics.prefill_compiles = sched.prefill.misses
+    sched.metrics.prefill_compiles = sched.window_prefill_compiles()
     done, sched.completed = sched.completed, []
     return done, t_end - t0

@@ -248,3 +248,33 @@ def test_measured_search_writes_and_uses_cache(tmp_path, monkeypatch):
                                             use_cache=False)
     finally:
         autotune.clear_cache()
+
+
+def test_legacy_qnn_cache_alias_honored(tmp_path, monkeypatch):
+    """Regression: pre-registry on-disk entries were keyed on path 'qnn';
+    after the rename to 'qnn8' they were silently ignored. A 'qnn8' lookup
+    must consult the legacy 'qnn' key — and an exact 'qnn8' entry wins."""
+    import json
+
+    cache = tmp_path / "autotune.json"
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(cache))
+    legacy = dict(block_m=8, block_n=128, block_k=64)
+    cache.write_text(json.dumps({autotune.cache_key("qnn", 16, 256, 128): legacy}))
+    autotune.clear_cache()
+    try:
+        got = autotune.get_blocks(16, 256, 128, "qnn8")
+        assert (got["block_m"], got["block_n"], got["block_k"]) == (8, 128, 64)
+        # untouched shapes still resolve heuristically
+        other = autotune.get_blocks(32, 512, 256, "qnn8")
+        assert other == autotune.get_blocks(32, 512, 256, "qnn8", use_cache=False)
+        # an exact qnn8 entry takes precedence over the legacy alias
+        exact = dict(block_m=16, block_n=128, block_k=32)
+        cache.write_text(json.dumps({
+            autotune.cache_key("qnn", 16, 256, 128): legacy,
+            autotune.cache_key("qnn8", 16, 256, 128): exact,
+        }))
+        autotune.clear_cache()
+        got = autotune.get_blocks(16, 256, 128, "qnn8")
+        assert (got["block_m"], got["block_n"], got["block_k"]) == (16, 128, 32)
+    finally:
+        autotune.clear_cache()

@@ -228,6 +228,70 @@ def test_bucketed_prefill_logits_exact(lm):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+def test_percentile_ceil_nearest_rank():
+    """Regression: round(q*(n-1)) rounded half-to-even and biased tail
+    percentiles low — p50 of 2 samples returned the MIN, p95 of 20 the 19th
+    of 20. Ceil-based nearest-rank is conservative (never under-reports)."""
+    from repro.serve.metrics import _percentile
+
+    assert _percentile([1.0, 2.0], 0.50) == 2.0  # was 1.0 (the min)
+    assert _percentile([float(i) for i in range(1, 21)], 0.95) == 20.0  # was 19.0
+    assert _percentile([1.0, 2.0, 3.0], 0.50) == 2.0  # exact rank unchanged
+    assert _percentile([float(i) for i in range(1, 11)], 0.95) == 10.0
+    assert _percentile([float(i) for i in range(1, 6)], 0.50) == 3.0  # 0.5*4=2.0 exact
+    assert _percentile([7.0], 0.95) == 7.0
+    assert _percentile([1.0, 2.0, 3.0], 0.0) == 1.0
+    assert _percentile([1.0, 2.0, 3.0], 1.0) == 3.0
+    assert _percentile([], 0.5) == 0.0
+
+
+def test_prefill_compile_window_excludes_warmup(lm):
+    """Regression: run() stamped the CUMULATIVE bucketed-jit miss counter, so
+    after reset_metrics() a timed window still reported the warmup run's
+    compiles. The window must report only its own delta."""
+    cfg, api, params = lm
+    sched = SlotScheduler(api, params, cfg, n_slots=2, max_len=32, min_bucket=8)
+    rng = np.random.RandomState(13)
+    # warmup: two buckets compiled (plen 3 -> 8, plen 9 -> 16)
+    sched.submit(Request(rid=0, prompt=rng.randint(0, cfg.vocab, 3).astype(np.int32),
+                         max_new_tokens=2))
+    sched.submit(Request(rid=1, prompt=rng.randint(0, cfg.vocab, 9).astype(np.int32),
+                         max_new_tokens=2))
+    sched.run()
+    assert sched.metrics.prefill_compiles == 2
+    sched.reset_metrics()
+    # timed window: one already-compiled bucket (hit) + one new (miss)
+    sched.submit(Request(rid=2, prompt=rng.randint(0, cfg.vocab, 4).astype(np.int32),
+                         max_new_tokens=2))
+    sched.submit(Request(rid=3, prompt=rng.randint(0, cfg.vocab, 17).astype(np.int32),
+                         max_new_tokens=2))
+    sched.run()
+    assert sched.prefill.misses == 3  # cumulative counter unchanged in meaning
+    assert sched.metrics.prefill_compiles == 1  # was 3 before the fix
+
+
+def test_kv_slot_double_free_and_order_under_churn(lm):
+    """Heap + free-set pool: lowest-index-first alloc and double-free
+    detection hold through interleaved alloc/free churn."""
+    cfg, api, params = lm
+    kv = KVSlotManager(api, n_slots=4, max_len=16)
+    assert [kv.alloc() for _ in range(4)] == [0, 1, 2, 3]
+    assert kv.alloc() is None
+    kv.free(2)
+    kv.free(0)
+    with pytest.raises(ValueError, match="double free"):
+        kv.free(2)
+    with pytest.raises(ValueError, match="out of range"):
+        kv.free(4)
+    assert kv.alloc() == 0  # lowest index first, not FIFO
+    kv.free(3)
+    kv.free(0)
+    assert [kv.alloc() for _ in range(3)] == [0, 2, 3]
+    assert kv.n_free == 0
+    kv.reset()
+    assert kv.n_free == 4 and kv.alloc() == 0
+
+
 def test_kv_slot_manager_alloc_free(lm):
     cfg, api, params = lm
     kv = KVSlotManager(api, n_slots=3, max_len=16)

@@ -1,0 +1,181 @@
+"""Multi-device tensor-parallel serving: token-for-token parity with the
+single-device runtime across all four registered backends, KV slot-pool
+sharding per the layout contract (incl. the divisibility fallback), and the
+one-compile-per-shape guarantee under sharded inputs.
+
+Multi-device cases run in a subprocess with 8 forced host devices (jax pins
+the device count at first init — same pattern as test_distributed.py); the
+spec-level cases below use an abstract mesh and need no devices.
+"""
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec
+
+from repro.distributed.meshes import abstract_mesh
+from repro.distributed.sharding import ShardingRules, logical_to_spec
+from repro.models.base import KV_CACHE_LOGICAL_AXES
+
+
+# ---------------------------------------------------------------------------
+# spec level: the KV layout contract maps onto a mesh as documented
+# ---------------------------------------------------------------------------
+
+
+def test_kv_cache_spec_shards_kv_heads():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    rules = ShardingRules()
+    # 4 kv heads divide model=2 -> heads sharded, everything else local
+    spec = logical_to_spec(KV_CACHE_LOGICAL_AXES, mesh, rules,
+                           (2, 4, 64, 4, 32))
+    assert spec == PartitionSpec(None, None, None, "model")
+    # scale leaves (trailing 1) shard identically
+    spec = logical_to_spec(KV_CACHE_LOGICAL_AXES, mesh, rules,
+                           (2, 4, 64, 4, 1))
+    assert spec == PartitionSpec(None, None, None, "model")
+
+
+def test_kv_cache_spec_divisibility_fallback():
+    mesh = abstract_mesh((4, 2), ("data", "model"))
+    # 1 kv head (GQA smoke) does not divide model=2 -> replicated leaf
+    spec = logical_to_spec(KV_CACHE_LOGICAL_AXES, mesh, ShardingRules(),
+                           (2, 4, 64, 1, 32))
+    assert spec == PartitionSpec()
+
+
+# ---------------------------------------------------------------------------
+# 8-device subprocess: end-to-end parity
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np, jax.numpy as jnp
+from jax.sharding import Mesh
+"""
+
+
+def _run_sub(body: str):
+    code = _SUBPROCESS_PRELUDE + textwrap.dedent(body)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True, text=True,
+                       env={**__import__("os").environ, "PYTHONPATH": "src"},
+                       timeout=600)
+    assert r.returncode == 0, f"STDOUT:\n{r.stdout}\nSTDERR:\n{r.stderr[-3000:]}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_sharded_continuous_token_identical_all_backends_8dev():
+    """Continuous engine on a (4, 2) data x model mesh == single-device
+    engine, token for token, for dense/bika/bnn/qnn8 over mixed prompt
+    lengths — with the Pallas kernel routes active (impl='pallas' shard_maps
+    them column-parallel; dense exercises plain GSPMD)."""
+    out = _run_sub("""
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.nn.module import unbox
+    from repro.serve.engine import Request, ServeEngine
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+
+    def run(mode, mesh_):
+        arch = get_smoke("smollm-360m", compute_mode=mode, remat=False).replace(
+            n_heads=4, n_kv_heads=2, head_dim=24)  # kv_heads divides model=2
+        if mode in ("bika", "bnn"):
+            arch = arch.replace(pack_signs=True)
+        if mode != "dense":
+            arch = arch.replace(bika_impl="pallas")
+        api = build_model(arch, phase="serve")
+        params = unbox(api.init(jax.random.PRNGKey(0)))
+        eng = ServeEngine(api, params, arch, max_len=32, engine="continuous",
+                          n_slots=2, mesh=mesh_)
+        rng = np.random.RandomState(0)
+        for i in range(5):
+            plen = int(rng.randint(3, 12))
+            eng.submit(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
+                               .astype(np.int32), max_new_tokens=6))
+        return {r.rid: list(r.output) for r in eng.run()}, eng
+
+    for mode in ("dense", "bika", "bnn", "qnn8"):
+        ref, _ = run(mode, None)
+        got, eng = run(mode, mesh)
+        assert ref == got, (mode, ref, got)
+        # KV pool leaves actually sharded: kv_heads dim split over model
+        sh = eng.scheduler.kv.cache["k"].sharding
+        assert sh.spec == jax.sharding.PartitionSpec(None, None, None, "model"), sh
+        # one-compile-per-shape survived sharded inputs: 5 mixed-length
+        # requests, pow2 buckets {4->16(min), 8->16, 16}, one decode program
+        assert eng.scheduler.prefill.misses <= 2, eng.scheduler.prefill.compiled_buckets
+        print(mode, "OK")
+    print("SHARDED_PARITY_OK")
+    """)
+    assert "SHARDED_PARITY_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_kv_divisibility_fallback_8dev():
+    """A 1-kv-head GQA cache cannot split over model=2: the pool falls back
+    to replication per leaf and serving stays token-identical."""
+    out = _run_sub("""
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.nn.module import unbox
+    from repro.serve.engine import Request, ServeEngine
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    arch = get_smoke("smollm-360m", compute_mode="dense", remat=False)
+    assert arch.n_kv_heads == 1
+    api = build_model(arch, phase="serve")
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+
+    def run(mesh_):
+        eng = ServeEngine(api, params, arch, max_len=32, engine="continuous",
+                          n_slots=2, mesh=mesh_)
+        rng = np.random.RandomState(1)
+        for i in range(4):
+            plen = int(rng.randint(3, 10))
+            eng.submit(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
+                               .astype(np.int32), max_new_tokens=5))
+        return {r.rid: list(r.output) for r in eng.run()}, eng
+
+    ref, _ = run(None)
+    got, eng = run(mesh)
+    assert ref == got
+    sh = eng.scheduler.kv.cache["k"].sharding
+    assert sh.spec == jax.sharding.PartitionSpec(), sh  # replicated fallback
+    print("FALLBACK_OK")
+    """)
+    assert "FALLBACK_OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_static_engine_token_identical_8dev():
+    """The static packed-batch engine rides the same mesh plumbing."""
+    out = _run_sub("""
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.nn.module import unbox
+    from repro.serve.engine import Request, ServeEngine
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    arch = get_smoke("smollm-360m", compute_mode="bika", remat=False).replace(
+        n_heads=4, n_kv_heads=2, head_dim=24, pack_signs=True)
+    api = build_model(arch, phase="serve")
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+
+    def run(mesh_):
+        eng = ServeEngine(api, params, arch, batch_size=2, max_len=32,
+                          engine="static", mesh=mesh_)
+        rng = np.random.RandomState(2)
+        for i in range(3):
+            plen = int(rng.randint(3, 10))
+            eng.submit(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
+                               .astype(np.int32), max_new_tokens=5))
+        return {r.rid: list(r.output) for r in eng.run()}
+
+    assert run(None) == run(mesh)
+    print("STATIC_SHARDED_OK")
+    """)
+    assert "STATIC_SHARDED_OK" in out
