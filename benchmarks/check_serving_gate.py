@@ -1,0 +1,92 @@
+"""Bench-regression gate over a BENCH_serving.json payload (CI).
+
+    PYTHONPATH=src:. python benchmarks/check_serving_gate.py \
+        /tmp/BENCH_serving_smoke.json --min-ratio 1.5 --max-paged-loss 0.10
+
+Fails (exit 1) when, for any benched mode:
+
+- continuous-vs-static goodput ratio drops below ``--min-ratio`` (the
+  continuous-batching win the runtime exists for), or
+- the paged row's goodput falls more than ``--max-paged-loss`` below the
+  dense continuous row (paged bookkeeping must stay ~free), or
+- the shared-prefix workload shows no prefix-cache hits at all (the reuse
+  path silently dead).
+
+TTFT improvement on the shared-prefix workload is reported but warn-only:
+wall-clock latency on shared CI runners is too noisy to hard-gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def check(payload: dict, *, min_ratio: float, max_paged_loss: float) -> int:
+    failures = []
+    results = payload.get("results", {})
+    if not results:
+        failures.append("payload has no results")
+    for mode, row in results.items():
+        ratio = row.get("goodput_ratio")
+        if ratio is None:
+            failures.append(f"[{mode}] missing goodput_ratio")
+        elif ratio < min_ratio:
+            failures.append(
+                f"[{mode}] continuous/static goodput {ratio:.2f}x < {min_ratio}x"
+            )
+        else:
+            print(f"[{mode}] continuous/static goodput {ratio:.2f}x >= {min_ratio}x")
+        paged = row.get("continuous_paged")
+        cont = row.get("continuous")
+        if not paged or not cont:
+            failures.append(f"[{mode}] missing continuous_paged/continuous rows")
+        else:
+            base = cont.get("goodput_tok_s") or 0.0
+            got = paged.get("goodput_tok_s") or 0.0
+            floor = (1.0 - max_paged_loss) * base
+            if got < floor:
+                failures.append(
+                    f"[{mode}] paged goodput {got:.1f} < {floor:.1f} tok/s "
+                    f"(>{max_paged_loss:.0%} below dense continuous {base:.1f})"
+                )
+            else:
+                print(f"[{mode}] paged goodput {got:.1f} vs continuous {base:.1f} "
+                      f"tok/s (floor {floor:.1f})")
+        shared = row.get("shared_prefix")
+        if not shared:
+            failures.append(f"[{mode}] missing shared_prefix row")
+        else:
+            hit = shared.get("paged", {}).get("prefix_hit_rate") or 0.0
+            if hit <= 0.0:
+                failures.append(f"[{mode}] shared-prefix workload had no cache hits")
+            else:
+                print(f"[{mode}] shared-prefix hit rate {hit:.2f}")
+            gain = shared.get("ttft_improvement")
+            if gain is not None and gain < 1.0:
+                print(f"[{mode}] WARNING: shared-prefix ttft improvement "
+                      f"{gain:.2f}x < 1.0x (warn-only: CI wall clock is noisy)")
+            elif gain is not None:
+                print(f"[{mode}] shared-prefix ttft improvement {gain:.2f}x")
+    for f in failures:
+        print(f"GATE FAIL: {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("bench_json")
+    ap.add_argument("--min-ratio", type=float, default=1.5,
+                    help="minimum continuous/static goodput ratio")
+    ap.add_argument("--max-paged-loss", type=float, default=0.10,
+                    help="maximum paged-vs-continuous goodput loss fraction")
+    args = ap.parse_args(argv)
+    with open(args.bench_json) as fh:
+        payload = json.load(fh)
+    rc = check(payload, min_ratio=args.min_ratio, max_paged_loss=args.max_paged_loss)
+    print("serving gate:", "FAIL" if rc else "PASS")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

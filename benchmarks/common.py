@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ from typing import List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import thresholds as thr
 

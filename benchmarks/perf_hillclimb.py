@@ -26,7 +26,7 @@ if "--_child" not in sys.argv:
     os.execv(sys.executable, [sys.executable, "-m", "benchmarks.perf_hillclimb",
                               "--_child"] + sys.argv[1:])
 
-from typing import Dict, List, Optional  # noqa: E402
+from typing import Dict, List
 
 PEAK, HBM, LINK = 197e12, 819e9, 50e9
 
@@ -42,7 +42,6 @@ def _terms(rec) -> Dict[str, float]:
 
 def run_variant(arch, shape, label, *, rules=None, extra=None, microbatches=None,
                 shard_grads=False, quantized_kv=False):
-    import jax
 
     from repro.launch.dryrun import run_cell
     from repro.launch.mesh import make_production_mesh
@@ -61,7 +60,7 @@ def run_variant(arch, shape, label, *, rules=None, extra=None, microbatches=None
 
 
 def main():
-    from repro.distributed.sharding import FSDP_RULES, LOGICAL_RULES, ShardingRules
+    from repro.distributed.sharding import LOGICAL_RULES, ShardingRules
 
     tp_rules = ShardingRules(LOGICAL_RULES)
     plans = {

@@ -9,7 +9,7 @@ import glob
 import json
 import os
 
-from .roofline import analyze_record, load_dir
+from .roofline import load_dir
 
 
 def dryrun_table(d: str) -> str:

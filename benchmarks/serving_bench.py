@@ -16,6 +16,14 @@ finishes, and nothing new is admitted meanwhile) and per-shape prefill
 recompiles (one program per distinct packed prompt width vs. the continuous
 engine's power-of-two bucket cache).
 
+Paged rows: every mode also runs the paged-KV engine on the same mixed
+trace (``results[mode]["continuous_paged"]`` — the CI gate bounds its
+goodput at >= 90% of dense continuous) and a shared-system-prompt workload
+through both continuous engines (``results[mode]["shared_prefix"]``), where
+the paged engine's prefix cache serves the system prompt from cached blocks
+after the first admission and the reported ``ttft_improvement`` isolates
+that win.
+
 Multi-device row: unless ``--no-multi-device``, the bench re-execs itself in
 a subprocess with 8 forced host devices (``XLA_FLAGS``, as in
 test_distributed) and ``--tp 2``, running the continuous engine
@@ -59,6 +67,25 @@ def make_workload(rng: np.random.RandomState, n: int, vocab: int, *,
         plen = int(rng.randint(plen_range[0], plen_range[1] + 1))
         ntok = int(rng.randint(ntok_range[0], ntok_range[1] + 1))
         prompt = rng.randint(0, vocab, plen).astype(np.int32)
+        out.append((float(arrivals[i]), Request(rid=i, prompt=prompt, max_new_tokens=ntok)))
+    return out
+
+
+def make_shared_prefix_workload(
+    rng: np.random.RandomState, n: int, vocab: int, *, arrival_rate: float,
+    sys_len: int, suffix_range: Tuple[int, int], ntok_range: Tuple[int, int],
+) -> List[Tuple[float, Request]]:
+    """Chat-style traffic: every request = one shared system prompt + a
+    short unique suffix. The paged engine's prefix cache serves ``sys_len``
+    tokens of every admission after the first from cached blocks; the dense
+    engines recompute them per request."""
+    arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, n))
+    sys_prompt = rng.randint(0, vocab, sys_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        slen = int(rng.randint(suffix_range[0], suffix_range[1] + 1))
+        ntok = int(rng.randint(ntok_range[0], ntok_range[1] + 1))
+        prompt = np.concatenate([sys_prompt, rng.randint(0, vocab, slen).astype(np.int32)])
         out.append((float(arrivals[i]), Request(rid=i, prompt=prompt, max_new_tokens=ntok)))
     return out
 
@@ -140,9 +167,11 @@ def run_static(api, params, arch, workload, *, batch_size: int, max_len: int,
 
 
 def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
-                   warmup: bool, mesh=None) -> Dict:
-    eng = ServeEngine(api, params, arch, max_len=max_len, engine="continuous",
-                      n_slots=n_slots, mesh=mesh)
+                   warmup: bool, mesh=None, engine: str = "continuous",
+                   block_size: int = 8, chunk: int = 16) -> Dict:
+    eng = ServeEngine(api, params, arch, max_len=max_len, engine=engine,
+                      n_slots=n_slots, kv_block_size=block_size,
+                      prefill_chunk=chunk, mesh=mesh)
     sched = eng.scheduler
     if warmup:
         _warmup(eng, arch.vocab)
@@ -161,6 +190,13 @@ def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
     out["slot_occupancy"] = sched.metrics.slot_occupancy
     out["prefill_compiles"] = sched.metrics.prefill_compiles
     out["decode_steps"] = sched.metrics.decode_steps
+    if engine == "paged":
+        out["prefix_hit_rate"] = sched.metrics.prefix_hit_rate
+        out["prefix_hit_tokens"] = sched.metrics.prefix_hit_tokens
+        out["prefill_chunks"] = sched.metrics.prefill_chunks
+        out["blocks_in_use_peak"] = sched.metrics.blocks_in_use_peak
+        out["admission_deferrals"] = sched.metrics.admission_deferrals
+        out["prefix_evictions"] = sched.metrics.prefix_evictions
     return out
 
 
@@ -176,26 +212,65 @@ def bench_mode(mode: str, args, mesh=None) -> Dict:
         plen_range=(args.min_prompt, args.max_prompt),
         ntok_range=(args.min_new, args.max_new),
     )
+    paged_kw = dict(block_size=args.kv_block_size, chunk=args.prefill_chunk)
     if mesh is not None:
-        # multi-device child run: only the continuous engine rides the mesh
+        # multi-device child run: only the scheduler engines ride the mesh
         cont = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
                               max_len=args.max_len, warmup=not args.no_warmup,
                               mesh=mesh)
+        paged = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
+                               max_len=args.max_len, warmup=not args.no_warmup,
+                               mesh=mesh, engine="paged", **paged_kw)
         print(f"[{mode}] continuous tp={mesh.shape['model']}: "
-              f"{cont['goodput_tok_s']:.1f} tok/s | occupancy "
+              f"{cont['goodput_tok_s']:.1f} tok/s | paged "
+              f"{paged['goodput_tok_s']:.1f} tok/s | occupancy "
               f"{cont['slot_occupancy']:.2f}")
-        return {"continuous": cont}
+        return {"continuous": cont, "continuous_paged": paged}
     static = run_static(api, params, arch, mk(), batch_size=args.batch_size,
                         max_len=args.max_len, warmup=not args.no_warmup)
     cont = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
                           max_len=args.max_len, warmup=not args.no_warmup)
+    paged = run_continuous(api, params, arch, mk(), n_slots=args.n_slots,
+                           max_len=args.max_len, warmup=not args.no_warmup,
+                           engine="paged", **paged_kw)
     ratio = (cont["goodput_tok_s"] / static["goodput_tok_s"]
              if static["goodput_tok_s"] else None)
+    paged_ratio = (paged["goodput_tok_s"] / cont["goodput_tok_s"]
+                   if cont["goodput_tok_s"] else None)
+    # shared-system-prompt workload: where prefix caching actually pays.
+    # Identical trace through the dense continuous and paged engines; the
+    # paged engine serves the system prompt from cached blocks after the
+    # first admission (TTFT drops by ~the shared prefill work).
+    mk_shared = lambda: make_shared_prefix_workload(
+        np.random.RandomState(args.seed + 1), args.requests, arch.vocab,
+        arrival_rate=args.arrival_rate, sys_len=args.sys_prompt,
+        suffix_range=(2, 8), ntok_range=(args.min_new, args.max_new),
+    )
+    sp_cont = run_continuous(api, params, arch, mk_shared(), n_slots=args.n_slots,
+                             max_len=args.max_len, warmup=not args.no_warmup)
+    sp_paged = run_continuous(api, params, arch, mk_shared(), n_slots=args.n_slots,
+                              max_len=args.max_len, warmup=not args.no_warmup,
+                              engine="paged", **paged_kw)
+    ttft_gain = (sp_cont["ttft_mean_s"] / sp_paged["ttft_mean_s"]
+                 if sp_paged.get("ttft_mean_s") else None)
+    shared = {
+        "sys_prompt_len": args.sys_prompt,
+        "continuous": sp_cont,
+        "paged": sp_paged,
+        "ttft_improvement": ttft_gain,
+    }
     print(f"[{mode}] static {static['goodput_tok_s']:.1f} tok/s | continuous "
-          f"{cont['goodput_tok_s']:.1f} tok/s | ratio {ratio:.2f}x | "
+          f"{cont['goodput_tok_s']:.1f} tok/s | paged "
+          f"{paged['goodput_tok_s']:.1f} tok/s | ratio {ratio:.2f}x | "
           f"occupancy {cont['slot_occupancy']:.2f} | prefill compiles "
-          f"{cont['prefill_compiles']} vs {static['distinct_prefill_shapes']} shapes")
-    return {"static": static, "continuous": cont, "goodput_ratio": ratio}
+          f"{cont['prefill_compiles']} vs {static['distinct_prefill_shapes']} shapes "
+          f"vs {paged['prefill_compiles']} (paged)")
+    print(f"[{mode}] shared-prefix: paged hit rate "
+          f"{sp_paged['prefix_hit_rate']:.2f} | ttft {sp_cont['ttft_mean_s']:.4f}s "
+          f"-> {sp_paged['ttft_mean_s']:.4f}s ({ttft_gain:.2f}x)")
+    return {"static": static, "continuous": cont, "continuous_paged": paged,
+            "goodput_ratio": ratio, "paged_goodput_ratio": paged_ratio,
+            "shared_prefix": shared}
 
 
 def multi_device_row(args) -> Optional[Dict]:
@@ -209,6 +284,9 @@ def multi_device_row(args) -> Optional[Dict]:
         "--n-slots", str(args.n_slots), "--max-len", str(args.max_len),
         "--min-prompt", str(args.min_prompt), "--max-prompt", str(args.max_prompt),
         "--min-new", str(args.min_new), "--max-new", str(args.max_new),
+        "--kv-block-size", str(args.kv_block_size),
+        "--prefill-chunk", str(args.prefill_chunk),
+        "--sys-prompt", str(args.sys_prompt),
         "--seed", str(args.seed), "--tp", "2", "--no-multi-device",
     ]
     if args.no_warmup:
@@ -253,6 +331,12 @@ def main(argv=None) -> int:
     ap.add_argument("--min-new", type=int, default=2)
     ap.add_argument("--max-new", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--kv-block-size", type=int, default=8,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--prefill-chunk", type=int, default=16,
+                    help="paged engine: chunked-prefill chunk length")
+    ap.add_argument("--sys-prompt", type=int, default=24,
+                    help="shared-prefix workload: system prompt length")
     ap.add_argument("--no-warmup", action="store_true")
     ap.add_argument("--tp", type=int, default=0,
                     help="run the continuous engine tensor-parallel on a "
@@ -286,6 +370,8 @@ def main(argv=None) -> int:
                     base = results[m]["continuous"]["goodput_tok_s"]
                     tp2 = row["continuous"]["goodput_tok_s"]
                     results[m]["tp2_goodput_ratio"] = tp2 / base if base else None
+                    if "continuous_paged" in row:
+                        results[m]["continuous_paged_tp2"] = row["continuous_paged"]
     payload = {
         "bench": "serving",
         "arch": args.arch,
@@ -297,7 +383,11 @@ def main(argv=None) -> int:
             "seed": args.seed,
         },
         "engines": {"static": {"batch_size": args.batch_size},
-                    "continuous": {"n_slots": args.n_slots}},
+                    "continuous": {"n_slots": args.n_slots},
+                    "continuous_paged": {"n_slots": args.n_slots,
+                                         "kv_block_size": args.kv_block_size,
+                                         "prefill_chunk": args.prefill_chunk,
+                                         "sys_prompt_len": args.sys_prompt}},
         "max_len": args.max_len,
         "tp": args.tp or None,
         "multi_device": (

@@ -11,7 +11,6 @@
 """
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import kan, thresholds as thr
 

@@ -6,9 +6,7 @@ CAC datapath reproduces the trained model's predictions.
 """
 import argparse
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.bika import quantize_thresholds, to_hardware
 from repro.data.vision import digits_batch

@@ -20,7 +20,9 @@ The three-line quickstart (DESIGN.md §4):
 Requests of different prompt lengths and token budgets share the fixed slot
 batch; a finished request frees its slot immediately and the next queued one
 is prefilled into it mid-flight (no head-of-line blocking). Compare
-``--engine static`` to watch goodput drop.
+``--engine static`` to watch goodput drop, or ``--engine paged`` for the
+paged-KV variant (block pool + shared-prefix reuse + chunked prefill,
+DESIGN.md §6) — same tokens, one prefill compile total.
 """
 import argparse
 
@@ -38,7 +40,10 @@ def main():
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--n-slots", type=int, default=4)
-    ap.add_argument("--engine", default="auto", choices=("auto", "static", "continuous"))
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "static", "continuous", "paged"))
+    ap.add_argument("--kv-block-size", type=int, default=8,
+                    help="paged engine: tokens per KV block")
     ap.add_argument("--tp", type=int, default=0,
                     help="tensor-parallel size over the local devices (0 = off)")
     ap.add_argument("--mesh-shape", default="",
@@ -56,7 +61,7 @@ def main():
 
     eng = ServeEngine(api, params, arch, batch_size=args.n_slots,
                       n_slots=args.n_slots, max_len=64, engine=args.engine,
-                      mesh=mesh)
+                      kv_block_size=args.kv_block_size, mesh=mesh)
     print(f"engine: {eng.engine}"
           + (f"  mesh: {dict(mesh.shape)}" if mesh is not None else ""))
     rng = np.random.RandomState(0)

@@ -12,12 +12,10 @@ Presets:
         --ckpt /tmp/bika_lm --crash-at 120
 """
 import argparse
-import os
 
-import jax
 
 from repro.configs import get_config, get_smoke
-from repro.train.trainer import SimulatedFailure, TrainConfig, Trainer, run_with_restarts
+from repro.train.trainer import TrainConfig, Trainer, run_with_restarts
 
 
 def preset_arch(name: str):

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .ste import sign, sign_ste
+from .ste import sign_ste
 
 __all__ = [
     "binarize",

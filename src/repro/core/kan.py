@@ -9,7 +9,6 @@ thresholds (core/convert.py) — Fig. 3-6.
 """
 from __future__ import annotations
 
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

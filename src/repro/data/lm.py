@@ -14,7 +14,7 @@ any host can regenerate any shard of any step). For multi-host sharding,
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,7 @@ overfit it the way CNV overfits CIFAR-10 (Fig. 11's signature).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

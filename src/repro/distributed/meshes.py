@@ -7,7 +7,7 @@ device_count=8 in a subprocess).
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -13,7 +13,6 @@ DP x TP (DESIGN.md §5) with PP available per config.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -19,13 +19,13 @@ hillclimbing = editing/overriding rules per architecture.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-from repro.nn.module import P, axes_of, unbox
+from repro.nn.module import P
 
 __all__ = [
     "LOGICAL_RULES",

@@ -18,7 +18,7 @@ tests and reported per-number in EXPERIMENTS.md.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Sequence
 
 import numpy as np
 

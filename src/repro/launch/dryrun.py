@@ -25,12 +25,11 @@ Per cell:
     parsed out of compiled.as_text().
 """
 import argparse
-import dataclasses
 import json
 import re
 import time
 import traceback
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,6 @@ jax device state (the dry-run sets XLA_FLAGS first).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 

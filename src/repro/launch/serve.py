@@ -58,9 +58,21 @@ def main(argv=None) -> int:
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--quantized-kv", action="store_true")
-    ap.add_argument("--engine", default="auto", choices=("auto", "static", "continuous"))
+    ap.add_argument("--engine", default="auto",
+                    choices=("auto", "static", "continuous", "paged"))
     ap.add_argument("--n-slots", type=int, default=0,
                     help="continuous decode slots (0 -> batch-size)")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--kv-n-blocks", type=int, default=0,
+                    help="paged engine: physical pool blocks "
+                         "(0 -> n_slots * max_len / block_size)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache", action="store_true",
+                    default=True, help="paged engine: shared-prefix block reuse "
+                                       "(default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="paged engine: chunked-prefill chunk length")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = submit all up front)")
     ap.add_argument("--tp", type=int, default=0,
@@ -81,7 +93,11 @@ def main(argv=None) -> int:
 
     eng = ServeEngine(api, params, arch, batch_size=args.batch_size,
                       max_len=args.max_len, quantized_kv=args.quantized_kv,
-                      engine=args.engine, n_slots=args.n_slots or None, mesh=mesh)
+                      engine=args.engine, n_slots=args.n_slots or None,
+                      kv_block_size=args.kv_block_size,
+                      kv_n_blocks=args.kv_n_blocks or None,
+                      prefix_cache=args.prefix_cache,
+                      prefill_chunk=args.prefill_chunk, mesh=mesh)
     mesh_note = (f" mesh={dict(mesh.shape)}" if mesh is not None else "")
     print(f"[serve] engine={eng.engine}{mesh_note}")
     rng = np.random.RandomState(0)
@@ -98,10 +114,10 @@ def main(argv=None) -> int:
         reqs.append(Request(rid=i, prompt=rng.randint(0, arch.vocab, plen)
                             .astype(np.int32), max_new_tokens=args.new_tokens))
 
-    if args.arrival_rate > 0 and eng.engine != "continuous":
-        print("[serve] WARNING: --arrival-rate needs the continuous engine; "
-              f"engine={eng.engine} drains the queue closed-loop instead")
-    if args.arrival_rate > 0 and eng.engine == "continuous":
+    if args.arrival_rate > 0 and eng.scheduler is None:
+        print("[serve] WARNING: --arrival-rate needs a slot-scheduler engine "
+              f"(continuous/paged); engine={eng.engine} drains closed-loop instead")
+    if args.arrival_rate > 0 and eng.scheduler is not None:
         arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
         done, _ = replay_arrivals(eng.scheduler, list(zip(arrivals, reqs)))
     else:
@@ -116,6 +132,11 @@ def main(argv=None) -> int:
         print(f"[serve] goodput={m['goodput_tok_s']:.1f} tok/s "
               f"occupancy={m['slot_occupancy']:.2f} "
               f"prefill compiles={m['prefill_compiles']}")
+        if eng.engine == "paged":
+            print(f"[serve] prefix hit rate={m['prefix_hit_rate']:.2f} "
+                  f"blocks peak={m['blocks_in_use_peak']} "
+                  f"chunks={m['prefill_chunks']} "
+                  f"deferrals={m['admission_deferrals']}")
     return 0
 
 

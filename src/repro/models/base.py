@@ -18,7 +18,9 @@ __all__ = [
     "KVCacheLayout",
     "KV_CACHE_LOGICAL_AXES",
     "ModelAPI",
+    "PagedKVLayout",
     "kv_cache_layout",
+    "paged_kv_layout",
     "stack_layers",
     "scan_blocks",
     "scan_blocks_aux",
@@ -51,6 +53,26 @@ class KVCacheLayout(NamedTuple):
 KV_CACHE_LOGICAL_AXES = ("layers", None, None, "kv_heads", None)
 
 
+class PagedKVLayout(NamedTuple):
+    """Layout contract of the *paged* KV block pool (serve/paged_kv.py):
+    every leaf is ``(n_layers, n_phys_blocks, block_size, n_kv_heads,
+    head_dim)`` — the slot axis of the dense contract becomes a pool of
+    physical blocks and the position axis shrinks to one block. A request's
+    logical cache of ``max_len`` positions is the concatenation of the
+    ``max_len // block_size`` blocks named by its host-side block table;
+    block ``n_phys_blocks - 1`` is the reserved parking block that inactive
+    decode rows write junk into. Sharding is the dense contract's:
+    ``kv_heads`` over ``model``, everything else local (the gather/scatter
+    dims — blocks, offsets — never cross devices).
+    """
+
+    n_layers: int
+    n_phys_blocks: int
+    block_size: int
+    n_kv_heads: int
+    head_dim: int
+
+
 def kv_cache_layout(cache) -> KVCacheLayout:
     """Read the (layers, slots, max_len, heads, hd) layout off a stacked KV
     cache pytree (the ``{"k", "v", ...}`` dict produced by ``init_cache``).
@@ -71,6 +93,13 @@ def kv_cache_layout(cache) -> KVCacheLayout:
             raise ValueError(f"inconsistent cache leaves: {leaf.shape[:4]} vs {lead}")
     k = cache["k"] if isinstance(cache, dict) and "k" in cache else leaves[0]
     return KVCacheLayout(*k.shape)
+
+
+def paged_kv_layout(cache) -> PagedKVLayout:
+    """Read the paged layout off a block-pool pytree. Structurally the pool
+    IS a dense cache with (slots, max_len) = (n_phys_blocks, block_size) —
+    the same rank-5 validation applies; only the interpretation differs."""
+    return PagedKVLayout(*kv_cache_layout(cache))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,6 +181,12 @@ class ModelAPI(NamedTuple):
     decode_step: Callable[[Any, Any, Any, jax.Array], Any]  # -> (logits, cache)
     prefill: Optional[Callable[..., Any]] = None  # (params, batch, max_len) -> cache
     apply_aux: Optional[Callable[[Any, Any], Any]] = None  # -> (logits, aux_loss)
+    # paged serving (families with attention KV only — see PagedKVLayout):
+    # (params, tok (S,1), pool, positions (S,), tables (S,T)) -> (logits, pool)
+    decode_paged: Optional[Callable[..., Any]] = None
+    # (params, chunk (1,C), pool, table (1,T), start (1,), last_in_chunk (1,))
+    # -> (last-token logits (1,1,V), pool)
+    prefill_chunk: Optional[Callable[..., Any]] = None
 
 
 def stack_layers(key: jax.Array, n: int, init_one: Callable[[jax.Array], Any], axis_name=None):

@@ -28,7 +28,7 @@ from repro.nn.attention import (
 )
 from repro.nn.linear import linear_apply
 from repro.nn.mlp import mlp_apply, mlp_init
-from .base import ArchConfig, ModelAPI, make_norm, scan_blocks, scan_blocks_with_cache, stack_layers
+from .base import ArchConfig, ModelAPI, make_norm, scan_blocks, stack_layers
 
 __all__ = ["build_encdec"]
 

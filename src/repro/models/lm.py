@@ -8,8 +8,6 @@ independent of depth (essential for the 512-device dry-run on 1 CPU core).
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Any, Dict, Optional
 
 import jax
@@ -21,8 +19,10 @@ from repro.nn.attention import (
     AttnConfig,
     attn_apply,
     attn_decode_step,
+    attn_decode_step_paged,
     attn_init,
     attn_prefill,
+    attn_prefill_chunk,
     init_kv_cache,
 )
 from repro.nn.mlp import mlp_apply, mlp_init
@@ -93,41 +93,64 @@ def _layer_apply(p, x: jax.Array, cfg: ArchConfig, phase: str):
     return x + y, aux
 
 
-def _layer_decode(p, cache, x, position, cfg: ArchConfig, phase: str):
+def _layer_ffn(p, x: jax.Array, cfg: ArchConfig, phase: str) -> jax.Array:
+    """Residual MLP/MoE half shared by every cached-attention layer step
+    (decode, paged decode, chunked and whole-prompt prefill); the MoE aux
+    loss is train-only and discarded here."""
     _, norm_apply = make_norm(cfg)
     spec = cfg.linear_spec()
-    a, new_cache = attn_decode_step(
-        p["attn"], norm_apply(p["ln1"], x), cache, position, _attn_cfg(cfg), spec, phase=phase
-    )
-    x = x + a
     h = norm_apply(p["ln2"], x)
     if cfg.n_experts:
         y, _aux = moe_apply(p["moe"], h, _moe_cfg(cfg), spec, phase=phase)
     else:
         y = mlp_apply(p["mlp"], h, spec, activation=cfg.activation, phase=phase)
-    return x + y, new_cache
+    return x + y
+
+
+def _layer_decode(p, cache, x, position, cfg: ArchConfig, phase: str):
+    _, norm_apply = make_norm(cfg)
+    a, new_cache = attn_decode_step(
+        p["attn"], norm_apply(p["ln1"], x), cache, position, _attn_cfg(cfg),
+        cfg.linear_spec(), phase=phase
+    )
+    return _layer_ffn(p, x + a, cfg, phase), new_cache
+
+
+def _layer_decode_paged(p, cache, x, pos_tables, cfg: ArchConfig, phase: str):
+    """Per-layer paged decode: ``pos_tables`` bundles the per-row positions
+    (S,) and block tables (S, T) that ride through the layer scan together."""
+    position, tables = pos_tables
+    _, norm_apply = make_norm(cfg)
+    a, new_cache = attn_decode_step_paged(
+        p["attn"], norm_apply(p["ln1"], x), cache, position, tables, _attn_cfg(cfg),
+        cfg.linear_spec(), phase=phase,
+    )
+    return _layer_ffn(p, x + a, cfg, phase), new_cache
+
+
+def _layer_chunk(p, cache, x, start_tables, cfg: ArchConfig, phase: str):
+    start, tables = start_tables
+    _, norm_apply = make_norm(cfg)
+    a, new_cache = attn_prefill_chunk(
+        p["attn"], norm_apply(p["ln1"], x), cache, tables, start, _attn_cfg(cfg),
+        cfg.linear_spec(), phase=phase,
+    )
+    return _layer_ffn(p, x + a, cfg, phase), new_cache
 
 
 def _layer_prefill(p, x, cfg: ArchConfig, phase: str, max_len: int, quantized: bool):
     _, norm_apply = make_norm(cfg)
-    spec = cfg.linear_spec()
     a, cache = attn_prefill(
         p["attn"],
         norm_apply(p["ln1"], x),
         _attn_cfg(cfg),
-        spec,
+        cfg.linear_spec(),
         max_len=max_len,
         phase=phase,
         quantized=quantized,
         cache_dtype=jnp.dtype(cfg.compute_dtype),
     )
-    x = x + a
-    h = norm_apply(p["ln2"], x)
-    if cfg.n_experts:
-        y, _ = moe_apply(p["moe"], h, _moe_cfg(cfg), cfg.linear_spec(), phase=phase)
-    else:
-        y = mlp_apply(p["mlp"], h, spec, activation=cfg.activation, phase=phase)
-    return x + y, cache
+    return _layer_ffn(p, x + a, cfg, phase), cache
 
 
 def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
@@ -176,6 +199,41 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
         x = norm_apply(params["ln_f"], x)
         return embedding.unembed_apply(params["embed"], x), new_cache
 
+    def decode_paged(params, tokens, cache, position, tables):
+        """Paged one-token decode: cache is the block pool (PagedKVLayout),
+        ``tables`` the (S, T) per-slot block tables. Same logits as
+        ``decode_step`` over the equivalent dense rows, bit for bit."""
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, new_cache = scan_blocks_with_cache(
+            params["layers"],
+            cache,
+            x,
+            lambda p, c, h, pt: _layer_decode_paged(p, c, h, pt, cfg, phase),
+            (jnp.asarray(position, jnp.int32), tables),
+        )
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
+    def prefill_chunk(params, tokens, cache, tables, start, last_in_chunk):
+        """One fixed-size prompt chunk through every layer, appending its KV
+        to the block pool. ``last_in_chunk`` ((B,) int32, position *within*
+        the chunk) selects which token's logits to return — the last real
+        token on the final (right-padded) chunk, ignored on earlier ones."""
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, new_cache = scan_blocks_with_cache(
+            params["layers"],
+            cache,
+            x,
+            lambda p, c, h, st: _layer_chunk(p, c, h, st, cfg, phase),
+            (jnp.asarray(start, jnp.int32), tables),
+        )
+        _, norm_apply = make_norm(cfg)
+        idx = jnp.asarray(last_in_chunk, jnp.int32).reshape(-1)[:, None, None]
+        x = jnp.take_along_axis(x, jnp.broadcast_to(idx, (x.shape[0], 1, x.shape[2])), axis=1)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
     def prefill(params, batch, *, max_len: Optional[int] = None, quantized: bool = False,
                 last_index=None):
         """Prompt pass: (last-token logits (B,1,V), stacked KV cache).
@@ -211,4 +269,6 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
         decode_step=decode_step,
         prefill=prefill,
         apply_aux=apply_aux,
+        decode_paged=decode_paged,
+        prefill_chunk=prefill_chunk,
     )

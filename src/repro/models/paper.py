@@ -13,7 +13,7 @@ Last layer outputs raw (integer for bika/bnn) class scores used as logits.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +22,6 @@ from repro.core.backend import get_backend
 from repro.core.convert import tree_to_serve
 from repro.nn.conv import conv2d_apply, conv2d_init, maxpool2d
 from repro.nn.linear import LinearSpec, linear_apply, linear_init
-from repro.nn.module import unbox
 
 __all__ = [
     "PaperConfig",

@@ -13,7 +13,6 @@ instead of storing them — the XLA analogue of flash attention.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional
 
 import jax
@@ -21,7 +20,6 @@ import jax.numpy as jnp
 
 from repro.distributed.constraints import constrain
 from .linear import LinearSpec, linear_apply, linear_init
-from .module import P
 from .rotary import apply_rope
 
 __all__ = [
@@ -30,9 +28,12 @@ __all__ = [
     "attn_apply",
     "attn_prefill",
     "attn_decode_step",
+    "attn_decode_step_paged",
+    "attn_prefill_chunk",
     "init_kv_cache",
     "dot_attention",
     "blockwise_attention",
+    "paged_gather",
 ]
 
 NEG_INF = -1e30
@@ -405,4 +406,182 @@ def attn_decode_step(
         kv_valid_len=valid_len,
     )
     y = linear_apply(params["wo"], out.reshape(b, 1, -1), spec, phase=phase)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-pool cache, gather-based decode, chunked prefill
+# ---------------------------------------------------------------------------
+
+
+def paged_gather(leaf: jax.Array, table: jax.Array) -> jax.Array:
+    """Assemble per-row logical KV views from a block pool.
+
+    leaf: ``(n_phys_blocks, block_size, H, D|1)`` (one layer of the pool);
+    table: ``(B, T)`` int32 block ids. Returns ``(B, T * block_size, H, D|1)``
+    where row ``i``'s position ``p`` is ``leaf[table[i, p // bs], p % bs]`` —
+    exactly the dense slot row the block writes were scattered from, so
+    attention over the gathered view is bit-identical to the dense path.
+    """
+    g = leaf[table]  # (B, T, bs, H, D)
+    return g.reshape(g.shape[0], g.shape[1] * g.shape[2], *g.shape[3:])
+
+
+def attn_decode_step_paged(
+    params,
+    x: jax.Array,
+    cache,
+    position: jax.Array,
+    table: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "serve",
+):
+    """One-token decode against a paged block pool (PagedKVLayout leaves
+    ``(n_phys_blocks, block_size, H, D)`` for this layer).
+
+    ``position``: (B,) per-row next-write positions; ``table``: (B, T) block
+    tables (T = max_len // block_size). The new K/V is scattered at physical
+    ``(table[i, p // bs], p % bs)``, then the pool is gathered back into
+    per-row ``(B, max_len, ...)`` views — the same bytes, positions and masks
+    as the dense per-row ``attn_decode_step``, so outputs are bit-identical.
+    Inactive rows must point their whole table at the reserved parking block
+    (their junk writes race only with each other). SWA is unsupported: a
+    ring cache has no block-aligned logical order to page.
+    """
+    assert cfg.window is None, "paged decode does not support sliding-window caches"
+    b = x.shape[0]
+    hd = cfg.head_dim
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    position = jnp.asarray(position, jnp.int32)
+    pos = position[:, None]  # (B, 1): per-row RoPE / mask positions
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    bs = cache["k"].shape[1]
+    blk = jnp.take_along_axis(table, (position // bs)[:, None], axis=1)[:, 0]  # (B,)
+    off = position % bs
+    quantized = "k_scale" in cache
+
+    def write(buf, upd):  # upd: (B, 1, H, D|1) scattered at per-row (blk, off)
+        return buf.at[blk, off].set(upd[:, 0].astype(buf.dtype))
+
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": write(cache["k"], kq),
+            "v": write(cache["v"], vq),
+            "k_scale": write(cache["k_scale"], ks),
+            "v_scale": write(cache["v_scale"], vs),
+        }
+        k_all = _dequantize_kv(
+            paged_gather(new_cache["k"], table), paged_gather(new_cache["k_scale"], table), x.dtype
+        )
+        v_all = _dequantize_kv(
+            paged_gather(new_cache["v"], table), paged_gather(new_cache["v_scale"], table), x.dtype
+        )
+    else:
+        new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+        k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
+        v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
+
+    max_len = table.shape[1] * bs
+    out = dot_attention(
+        q,
+        k_all,
+        v_all,
+        q_positions=pos,
+        kv_positions=jnp.arange(max_len),
+        causal=True,
+        kv_valid_len=position + 1,
+    )
+    y = linear_apply(params["wo"], out.reshape(b, 1, -1), spec, phase=phase)
+    return y, new_cache
+
+
+def attn_prefill_chunk(
+    params,
+    x: jax.Array,
+    cache,
+    table: jax.Array,
+    start: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "serve",
+):
+    """One fixed-size prompt chunk appended to a paged block pool.
+
+    x: (B, C, D) embedded chunk occupying logical positions
+    ``start + [0, C)`` of each row; K/V are scattered into the pool via the
+    block table, then the chunk's queries attend the gathered
+    ``(B, max_len, ...)`` view causally — so chunk ``n`` sees every earlier
+    chunk's (and any shared prefix's) cached keys. Positions past
+    ``max_len`` (final-chunk right-padding overhang) are dropped by an
+    explicit OOB scatter, never clamped onto live rows. Pad positions
+    inside ``max_len`` write junk that stays causally in the future of
+    every real query and is overwritten by decode before it is attended —
+    the same argument as the bucketed right-pad (DESIGN.md §4.2).
+    """
+    assert cfg.window is None, "paged prefill does not support sliding-window caches"
+    b, c, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    k = constrain(k, ("batch", "seq", "kv_heads", None))
+    v = constrain(v, ("batch", "seq", "kv_heads", None))
+    start = jnp.asarray(start, jnp.int32)
+    lp = start[:, None] + jnp.arange(c, dtype=jnp.int32)  # (B, C) logical positions
+    q = apply_rope(q, lp, cfg.rope_theta)
+    k = apply_rope(k, lp, cfg.rope_theta)
+
+    n_phys, bs = cache["k"].shape[:2]
+    max_len = table.shape[1] * bs
+    idx = jnp.clip(lp // bs, 0, table.shape[1] - 1)
+    blk = jnp.take_along_axis(table, idx, axis=1)  # (B, C)
+    # overhang positions (>= max_len) get an out-of-range block id: the
+    # scatter drops them instead of clamping onto a live block
+    blk = jnp.where(lp < max_len, blk, n_phys)
+    off = lp % bs
+    quantized = "k_scale" in cache
+
+    def write(buf, upd):  # upd: (B, C, H, D|1) scattered at (blk, off) pairs
+        return buf.at[blk, off].set(upd.astype(buf.dtype), mode="drop")
+
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": write(cache["k"], kq),
+            "v": write(cache["v"], vq),
+            "k_scale": write(cache["k_scale"], ks),
+            "v_scale": write(cache["v_scale"], vs),
+        }
+        k_all = _dequantize_kv(
+            paged_gather(new_cache["k"], table), paged_gather(new_cache["k_scale"], table), x.dtype
+        )
+        v_all = _dequantize_kv(
+            paged_gather(new_cache["v"], table), paged_gather(new_cache["v_scale"], table), x.dtype
+        )
+    else:
+        new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+        k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
+        v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
+
+    out = dot_attention(
+        q,
+        k_all,
+        v_all,
+        q_positions=lp,
+        kv_positions=jnp.arange(max_len),
+        causal=True,
+    )
+    y = linear_apply(params["wo"], out.reshape(b, c, -1), spec, phase=phase)
     return y, new_cache

@@ -3,7 +3,6 @@ squared-ReLU (nemotron). Projections use the switchable linear backend."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.distributed.constraints import constrain
 from .linear import LinearSpec, linear_apply, linear_init

@@ -16,7 +16,6 @@ seq). Decode path: single-step update with the state carried in the cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -5,7 +5,7 @@ sharded by distributed.zero1_shardings (ZeRO-1) and checkpointed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

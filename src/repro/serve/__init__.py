@@ -1,20 +1,31 @@
-"""repro.serve — serving runtime: continuous-batching slot scheduler,
-bucketed compile cache, KV slot manager, metrics, and the engine facade."""
-from .compile_cache import BucketedPrefill, bucket_for
+"""repro.serve — serving runtime: continuous-batching slot scheduler (dense
+and paged-KV variants), bucketed/chunked compile caches, KV slot manager,
+paged block pool with shared-prefix reuse, metrics, and the engine facade."""
+from .compile_cache import BucketedPrefill, ChunkedPrefill, bucket_for
 from .engine import Request, ServeEngine, serve_batch, serve_params_from_train
 from .kv import KVSlotManager
 from .metrics import RequestMetrics, RunMetrics
-from .scheduler import SlotScheduler, replay_arrivals, scheduler_supports
+from .paged_kv import PagedKVManager, hash_prompt_blocks
+from .scheduler import (
+    PagedSlotScheduler,
+    SlotScheduler,
+    replay_arrivals,
+    scheduler_supports,
+)
 
 __all__ = [
     "BucketedPrefill",
+    "ChunkedPrefill",
     "KVSlotManager",
+    "PagedKVManager",
+    "PagedSlotScheduler",
     "Request",
     "RequestMetrics",
     "RunMetrics",
     "ServeEngine",
     "SlotScheduler",
     "bucket_for",
+    "hash_prompt_blocks",
     "replay_arrivals",
     "scheduler_supports",
     "serve_batch",

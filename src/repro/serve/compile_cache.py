@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["BucketedPrefill", "bucket_for"]
+__all__ = ["BucketedPrefill", "ChunkedPrefill", "bucket_for"]
 
 
 def bucket_for(prompt_len: int, max_len: int, *, min_bucket: int = 16) -> int:
@@ -147,3 +147,103 @@ class BucketedPrefill:
                 params, jnp.asarray(toks), jnp.asarray([plen - 1], jnp.int32)
             )
         return logits, cache
+
+
+class ChunkedPrefill:
+    """Chunked prefill into a paged block pool: ONE compiled program total.
+
+    Where ``BucketedPrefill`` compiles ``O(log2 max_len)`` bucket shapes and
+    must run a whole prompt in one shot, the chunked path appends the prompt
+    ``chunk`` tokens at a time through ``api.prefill_chunk`` — a single
+    ``(1, chunk)`` program whose ``start``/``last_in_chunk`` ride through as
+    traced scalars. Each chunk's queries attend the pool's gathered view, so
+    later chunks see earlier chunks' (and any shared prefix's) cached KV;
+    the final chunk is right-padded, which is exact for the same causal
+    reason as bucketing (pad queries sit in the future; their junk KV writes
+    land past the prompt and are overwritten by decode before attended).
+
+    ``__call__`` starts at ``cached_len`` (the shared-prefix hit length from
+    ``PagedKVManager.try_admit``), so a prefix hit skips those chunks
+    entirely — the TTFT win of prefix reuse.
+
+    The pool is donated through every chunk call; callers thread the
+    returned cache back into their manager. With ``mesh=`` the program pins
+    params/pool placements exactly like the bucketed path.
+    """
+
+    def __init__(self, api, *, chunk: int, max_len: int, mesh=None, rules=None,
+                 param_sh=None, cache_sh=None):
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        self.api = api
+        self.chunk = chunk
+        self.max_len = max_len
+        self.mesh = mesh
+        self.hits = 0
+        self.misses = 0
+        self._fn: Optional[Callable] = None
+
+        def run(params, cache, toks, table, start, last_in_chunk):
+            return self.api.prefill_chunk(params, toks, cache, table, start, last_in_chunk)
+
+        if mesh is None:
+            self._build = lambda: jax.jit(run, donate_argnums=(1,))
+        else:
+            from repro.distributed.sharding import (
+                ShardingRules, api_param_shardings, replicated_sharding,
+            )
+
+            rules = rules if rules is not None else ShardingRules()
+            psh = param_sh if param_sh is not None else api_param_shardings(mesh, api, rules)
+            rep = replicated_sharding(mesh)
+            assert cache_sh is not None, "mesh path needs the pool's shardings"
+            self._build = lambda: jax.jit(
+                run,
+                donate_argnums=(1,),
+                in_shardings=(psh, cache_sh, rep, rep, rep, rep),
+                out_shardings=(rep, cache_sh),
+            )
+
+    def _mesh_ctx(self):
+        return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    def fn(self) -> Callable:
+        if self._fn is None:
+            self.misses += 1  # one miss ever: the single (1, chunk) program
+            self._fn = self._build()
+        else:
+            self.hits += 1
+        return self._fn
+
+    def __call__(self, params, cache, table_row: np.ndarray, prompt: np.ndarray,
+                 cached_len: int = 0):
+        """Append ``prompt[cached_len:]`` to the pool chunk by chunk.
+
+        Returns ``(last_logits (1,1,V), cache, n_chunks)`` where
+        ``last_logits`` are the logits after the prompt's final token —
+        bit-identical to the bucketed whole-prompt prefill the dense
+        continuous engine admits with (tests/test_paged_kv.py).
+        """
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        plen = len(prompt)
+        if plen < 1:
+            raise ValueError("empty prompt")
+        if not 0 <= cached_len <= plen - 1:
+            raise ValueError(f"cached_len {cached_len} outside [0, {plen - 1}]")
+        table = jnp.asarray(table_row, jnp.int32).reshape(1, -1)
+        logits = None
+        n_chunks = 0
+        start = cached_len
+        while start < plen:
+            end = min(start + self.chunk, plen)
+            toks = np.zeros((1, self.chunk), np.int32)
+            toks[0, : end - start] = prompt[start:end]
+            last = (plen - 1 - start) if end == plen else (self.chunk - 1)
+            with self._mesh_ctx():
+                logits, cache = self.fn()(
+                    params, cache, jnp.asarray(toks), table,
+                    jnp.asarray([start], jnp.int32), jnp.asarray([last], jnp.int32),
+                )
+            n_chunks += 1
+            start = end
+        return logits, cache, n_chunks

@@ -8,6 +8,16 @@ API:
   slots freed the moment a request finishes, queued requests admitted
   mid-flight. No head-of-line blocking; the jitted decode step never
   recompiles.
+- ``engine="paged"`` — the continuous scheduler over a paged KV block pool
+  (serve/paged_kv.py): block-granular allocation, shared-prefix block reuse
+  with refcount/copy-on-write/LRU eviction, and chunked prefill through one
+  compiled chunk program (``kv_block_size`` / ``kv_n_blocks`` /
+  ``prefix_cache`` / ``prefill_chunk`` kwargs). Token-for-token identical
+  to ``continuous`` with fp KV caches (the dense pool remains the parity
+  oracle in tests); with ``quantized_kv`` it is deterministic but NOT
+  bit-equal to dense — chunked prefill attends earlier chunks through the
+  int8+scale round-trip, where the dense whole-prompt prefill attends raw
+  fp keys (serve/paged_kv.py).
 - ``engine="static"`` — the original drainer (kept for A/B benchmarking and
   for model families the scheduler does not cover): pack up to
   ``batch_size`` requests, left-pad to a shared length, run the whole group
@@ -38,7 +48,7 @@ token-for-token identical to the single-device engine (DESIGN.md §5).
 from __future__ import annotations
 
 import contextlib
-from typing import Any, Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +56,12 @@ import numpy as np
 
 from repro.core.convert import tree_to_serve
 from repro.models.base import ArchConfig, ModelAPI
-from repro.serve.scheduler import Request, SlotScheduler, scheduler_supports
+from repro.serve.scheduler import (
+    PagedSlotScheduler,
+    Request,
+    SlotScheduler,
+    scheduler_supports,
+)
 
 __all__ = ["Request", "ServeEngine", "serve_batch", "serve_params_from_train"]
 
@@ -70,6 +85,10 @@ class ServeEngine:
         engine: str = "auto",
         n_slots: Optional[int] = None,
         min_bucket: int = 16,
+        kv_block_size: int = 16,
+        kv_n_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
+        prefill_chunk: int = 32,
         mesh=None,
         rules=None,
     ):
@@ -80,13 +99,27 @@ class ServeEngine:
         self.quantized_kv = quantized_kv
         self.mesh = mesh
         self.rules = rules
-        if engine not in ("auto", "static", "continuous"):
+        if engine not in ("auto", "static", "continuous", "paged"):
             raise ValueError(f"unknown engine {engine!r}")
         if engine == "auto":
             engine = "continuous" if scheduler_supports(arch) else "static"
         self.engine = engine
         self.scheduler: Optional[SlotScheduler] = None
-        if engine == "continuous":
+        if engine == "paged":
+            self.scheduler = PagedSlotScheduler(
+                api, params, arch,
+                n_slots=n_slots or batch_size,
+                max_len=max_len,
+                quantized_kv=quantized_kv,
+                block_size=kv_block_size,
+                n_blocks=kv_n_blocks,
+                prefix_cache=prefix_cache,
+                chunk=prefill_chunk,
+                mesh=mesh,
+                rules=rules,
+            )
+            params = self.scheduler.params  # already mesh-placed
+        elif engine == "continuous":
             self.scheduler = SlotScheduler(
                 api, params, arch,
                 n_slots=n_slots or batch_size,
@@ -170,7 +203,7 @@ class ServeEngine:
                 f"req {req.rid}: prompt length {len(req.prompt)} >= max_len "
                 f"{self.max_len} leaves no room to generate"
             )
-        if self.engine == "continuous":
+        if self.scheduler is not None:
             self.scheduler.submit(req)
         else:
             self.queue.append(req)
@@ -249,7 +282,7 @@ class ServeEngine:
     def run(self, extra_batch: Optional[Dict] = None) -> List[Request]:
         """Drain all submitted requests. Continuous: slot scheduler; static:
         batch_size groups run to completion."""
-        if self.engine == "continuous":
+        if self.scheduler is not None:
             if extra_batch is not None:
                 raise ValueError(
                     "extra_batch is packed-batch-shaped and only supported by "

@@ -87,10 +87,27 @@ class RunMetrics:
     prefill_compiles: int = 0  # bucketed-jit cache misses
     _occupancy_sum: float = 0.0
     requests: List[RequestMetrics] = dataclasses.field(default_factory=list)
+    # paged-KV gauges (zero / idle on the dense engines)
+    prefill_chunks: int = 0  # chunk programs executed
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached blocks
+    prefix_prompt_tokens: int = 0  # prompt tokens eligible for lookup
+    prefix_evictions: int = 0  # LRU evictions of cached blocks
+    blocks_in_use_peak: int = 0  # high-water mark of pool blocks in use
+    admission_deferrals: int = 0  # ticks the queue head waited for blocks
 
     def record_step(self, n_active: int) -> None:
         self.decode_steps += 1
         self._occupancy_sum += n_active / max(self.n_slots, 1)
+
+    def record_blocks(self, in_use: int) -> None:
+        self.blocks_in_use_peak = max(self.blocks_in_use_peak, in_use)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of submitted prompt tokens served from the prefix cache."""
+        if not self.prefix_prompt_tokens:
+            return 0.0
+        return self.prefix_hit_tokens / self.prefix_prompt_tokens
 
     def finish_request(self, rm: RequestMetrics) -> None:
         self.completed_requests += 1
@@ -124,6 +141,12 @@ class RunMetrics:
             "slot_occupancy": self.slot_occupancy,
             "prefills": self.prefills,
             "prefill_compiles": self.prefill_compiles,
+            "prefill_chunks": self.prefill_chunks,
+            "prefix_hit_rate": self.prefix_hit_rate,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_evictions": self.prefix_evictions,
+            "blocks_in_use_peak": self.blocks_in_use_peak,
+            "admission_deferrals": self.admission_deferrals,
             "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
             "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
             "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,

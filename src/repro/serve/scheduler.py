@@ -39,7 +39,6 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import time
-from functools import partial
 from typing import Callable, List, Optional, Tuple
 
 import jax
@@ -47,11 +46,18 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.base import ArchConfig, ModelAPI
-from repro.serve.compile_cache import BucketedPrefill
+from repro.serve.compile_cache import BucketedPrefill, ChunkedPrefill
 from repro.serve.kv import KVSlotManager
 from repro.serve.metrics import RequestMetrics, RunMetrics
+from repro.serve.paged_kv import PagedKVManager
 
-__all__ = ["Request", "SlotScheduler", "replay_arrivals", "scheduler_supports"]
+__all__ = [
+    "PagedSlotScheduler",
+    "Request",
+    "SlotScheduler",
+    "replay_arrivals",
+    "scheduler_supports",
+]
 
 
 @dataclasses.dataclass
@@ -121,12 +127,7 @@ class SlotScheduler:
             self._param_sh = None
             self._rep = None
         self.params = params
-        self.kv = KVSlotManager(api, n_slots=n_slots, max_len=max_len,
-                                quantized=quantized_kv, mesh=mesh, rules=self.rules)
-        self.prefill = BucketedPrefill(
-            api, max_len=max_len, quantized=quantized_kv, min_bucket=min_bucket,
-            mesh=mesh, rules=self.rules, param_sh=self._param_sh,
-        )
+        self._init_kv_prefill(api, quantized_kv, min_bucket)
         self.metrics = RunMetrics(n_slots=n_slots)
         # prefill-compile counter at the start of the current metrics window:
         # BucketedPrefill.misses is cumulative across the scheduler's life,
@@ -142,6 +143,30 @@ class SlotScheduler:
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
+
+    # -- dense-vs-paged hooks (PagedSlotScheduler overrides these) ----------
+
+    def _init_kv_prefill(self, api, quantized_kv: bool, min_bucket: int) -> None:
+        self.kv = KVSlotManager(api, n_slots=self.n_slots, max_len=self.max_len,
+                                quantized=quantized_kv, mesh=self.mesh, rules=self.rules)
+        self.prefill = BucketedPrefill(
+            api, max_len=self.max_len, quantized=quantized_kv, min_bucket=min_bucket,
+            mesh=self.mesh, rules=self.rules, param_sh=self._param_sh,
+        )
+
+    @property
+    def _slots_available(self) -> int:
+        return self.kv.n_free
+
+    def _release_slot(self, slot: int) -> None:
+        self.kv.free(slot)
+
+    def _run_tick(self) -> np.ndarray:
+        with self._mesh_ctx():
+            nxt, self.kv.cache = self._tick_fn(
+                self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
+            )
+        return np.asarray(nxt)
 
     def _build_tick(self):
         decode = self.api.decode_step
@@ -219,7 +244,9 @@ class SlotScheduler:
             req.on_token(token)
         return st.remaining <= 0 or (req.eos_id is not None and token == req.eos_id)
 
-    def _admit_one(self, req: Request) -> None:
+    def _admit_one(self, req: Request) -> bool:
+        """Admit one request into a free slot. Returns False when admission
+        must defer (paged block backpressure); the dense pool always admits."""
         slot = self.kv.alloc()
         assert slot is not None
         logits, pcache = self.prefill(self.params, req.prompt)
@@ -233,15 +260,21 @@ class SlotScheduler:
         if self._emit(st, t0):
             self._finish(req, st)
             self.kv.free(slot)
-            return
+            return True
         self.kv.write_prefill(slot, pcache)
         self._slots[slot] = st
         self._tok[slot] = t0
         self._pos[slot] = plen
+        return True
 
     def _admit(self) -> None:
-        while self.queue and self.kv.n_free:
-            self._admit_one(self.queue.pop(0))
+        """FIFO admission: the queue head either admits or (paged) defers —
+        a deferral blocks everything behind it, which is what makes block
+        backpressure deadlock-free (completions always free blocks)."""
+        while self.queue and self._slots_available:
+            if not self._admit_one(self.queue[0]):
+                break
+            self.queue.pop(0)
 
     def tick(self) -> bool:
         """Admit waiting requests, then run one decode step over the slot
@@ -250,11 +283,7 @@ class SlotScheduler:
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return False
-        with self._mesh_ctx():
-            nxt, self.kv.cache = self._tick_fn(
-                self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
-            )
-        nxt = np.asarray(nxt)
+        nxt = self._run_tick()
         self.metrics.record_step(len(active))
         for i in active:
             st = self._slots[i]
@@ -263,9 +292,10 @@ class SlotScheduler:
             if self._emit(st, int(nxt[i])):
                 self._finish(st.req, st)
                 self._slots[i] = None
-                self.kv.free(i)
+                self._release_slot(i)
                 # park the freed row at a safe in-bounds position; its junk
-                # writes are overwritten by the next admission's prefill
+                # writes are overwritten by the next admission's prefill (or
+                # land in the paged pool's parking block)
                 self._tok[i] = 0
                 self._pos[i] = 0
         return True
@@ -281,6 +311,136 @@ class SlotScheduler:
         self.metrics.prefill_compiles = self.window_prefill_compiles()
         done, self.completed = self.completed, []
         return done
+
+
+class PagedSlotScheduler(SlotScheduler):
+    """Slot scheduler over a paged KV block pool (serve/paged_kv.py).
+
+    Three behavioral deltas from the dense scheduler, all bit-neutral:
+
+    - **Chunked prefill**: prompts append block-by-block through ONE
+      compiled ``(1, chunk)`` program (compile_cache.ChunkedPrefill) instead
+      of ``O(log2 max_len)`` bucket shapes — long prompts stop paying a
+      whole-prompt prefill's worth of TTFT tail for a fresh bucket compile.
+    - **Shared-prefix reuse**: matching prompt prefixes attach cached blocks
+      (refcount++) and skip their chunks entirely; finished requests'
+      prompt blocks stay evictable-LRU in the prefix map.
+    - **Block backpressure**: admission reserves the request's whole span of
+      blocks up front; when blocks run short the queue head *defers* (FIFO,
+      deadlock-free — completions free blocks) instead of overcommitting.
+
+    The jitted tick gains one operand — the (S, T) block tables — and keeps
+    the single-signature guarantee: tables are data, not shape.
+    """
+
+    def __init__(
+        self,
+        api: ModelAPI,
+        params,
+        arch: ArchConfig,
+        *,
+        block_size: int = 16,
+        n_blocks: Optional[int] = None,
+        prefix_cache: bool = True,
+        chunk: int = 32,
+        **kw,
+    ):
+        if api.decode_paged is None or api.prefill_chunk is None:
+            raise ValueError(
+                "paged serving needs a model family with decode_paged/"
+                "prefill_chunk (attention-KV 'lm'); use engine='continuous'"
+            )
+        self.block_size = block_size
+        self._n_blocks_arg = n_blocks
+        self.prefix_enabled = prefix_cache
+        self.chunk = chunk
+        super().__init__(api, params, arch, **kw)
+        self._evict_base = 0
+
+    # -- hook overrides -----------------------------------------------------
+
+    def _init_kv_prefill(self, api, quantized_kv: bool, min_bucket: int) -> None:
+        self.kv = PagedKVManager(
+            api, n_slots=self.n_slots, max_len=self.max_len,
+            block_size=self.block_size, n_blocks=self._n_blocks_arg,
+            prefix_cache=self.prefix_enabled, quantized=quantized_kv,
+            mesh=self.mesh, rules=self.rules,
+        )
+        self.prefill = ChunkedPrefill(
+            api, chunk=self.chunk, max_len=self.max_len, mesh=self.mesh,
+            rules=self.rules, param_sh=self._param_sh, cache_sh=self.kv._cache_sh,
+        )
+
+    @property
+    def _slots_available(self) -> int:
+        return self.kv.n_free_slots
+
+    def _release_slot(self, slot: int) -> None:
+        self.kv.free_slot(slot)
+
+    def _run_tick(self) -> np.ndarray:
+        with self._mesh_ctx():
+            nxt, self.kv.cache = self._tick_fn(
+                self.params, self.kv.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(self.kv.tables),
+            )
+        return np.asarray(nxt)
+
+    def _build_tick(self):
+        decode = self.api.decode_paged
+
+        def tick(params, cache, tok, pos, tables):
+            logits, cache = decode(params, tok[:, None], cache, pos, tables)
+            return jnp.argmax(logits[:, -1], -1).astype(jnp.int32), cache
+
+        if self.mesh is None:
+            return jax.jit(tick, donate_argnums=(1,))
+        return jax.jit(
+            tick,
+            donate_argnums=(1,),
+            in_shardings=(self._param_sh, self.kv._cache_sh, self._rep, self._rep,
+                          self._rep),
+            out_shardings=(self._rep, self.kv._cache_sh),
+        )
+
+    def reset_metrics(self) -> None:
+        super().reset_metrics()
+        self._evict_base = self.kv.evictions
+
+    def _admit_one(self, req: Request) -> bool:
+        slot = self.kv.alloc_slot()
+        assert slot is not None
+        plen = req.metrics.prompt_len
+        # decode writes go to plen .. plen+n-2; keep them inside the cache
+        budget = min(req.max_new_tokens, self.max_len - plen + 1)
+        cached = self.kv.try_admit(slot, req.prompt, budget=budget, chunk=self.chunk)
+        if cached is None:
+            self.kv.free_slot(slot)  # owns no blocks yet; just re-parks
+            self.metrics.admission_deferrals += 1
+            return False
+        logits, self.kv.cache, n_chunks = self.prefill(
+            self.params, self.kv.cache, self.kv.tables[slot], req.prompt, cached
+        )
+        self.metrics.prefills += 1
+        self.metrics.prefill_chunks += n_chunks
+        self.metrics.prefix_prompt_tokens += plen
+        self.metrics.prefix_hit_tokens += cached
+        self.metrics.prefix_evictions = self.kv.evictions - self._evict_base
+        self.metrics.record_blocks(self.kv.blocks_in_use)
+        req.metrics.t_admit = self.clock()
+        # publish this prompt's full blocks before any chance of freeing, so
+        # even an instant-EOS request seeds the prefix cache
+        self.kv.register_prompt(slot, req.prompt)
+        t0 = int(np.argmax(np.asarray(logits)[0, -1]))
+        st = _SlotState(req=req, remaining=budget, emitted=[])
+        if self._emit(st, t0):
+            self._finish(req, st)
+            self.kv.free_slot(slot)
+            return True
+        self._slots[slot] = st
+        self._tok[slot] = t0
+        self._pos[slot] = plen
+        return True
 
 
 def replay_arrivals(

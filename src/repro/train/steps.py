@@ -9,7 +9,7 @@ functional optimizer update.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -21,7 +21,6 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from repro.checkpoint import CheckpointManager, latest_step
-from repro.configs.shapes import ShapeSpec
 from repro.data.lm import LMDataConfig, lm_batch
 from repro.distributed.sharding import (
     ShardingRules,
@@ -31,7 +30,7 @@ from repro.distributed.sharding import (
 )
 from repro.models import build_model
 from repro.models.base import ArchConfig
-from repro.nn.module import axes_of, unbox
+from repro.nn.module import unbox
 from repro.optim.adamw import OptimizerSpec, make_optimizer
 from .steps import make_train_step
 

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import backend as backend_mod
 from repro.core.backend import get_backend, pack_signs, registered_backends
 from repro.core.convert import tree_to_serve
 from repro.core.ste import sign_ste

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_NAMES, SHAPES, applicable_shapes, get_config, get_smoke
+from repro.configs import ARCH_NAMES, applicable_shapes, get_config, get_smoke
 from repro.models import build_model
 from repro.nn.module import unbox
 from repro.optim.adamw import OptimizerSpec, make_optimizer

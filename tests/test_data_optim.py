@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # absent in some environments: deterministic fallback
@@ -10,7 +9,7 @@ except ImportError:  # absent in some environments: deterministic fallback
 
 from repro.data.lm import LMDataConfig, lm_batch
 from repro.data.vision import digits_batch, make_digits, make_textures
-from repro.optim.adamw import OptimizerSpec, adamw, clip_by_global_norm, global_norm
+from repro.optim.adamw import OptimizerSpec, adamw, clip_by_global_norm
 from repro.optim.compression import (
     dequantize_int8,
     error_feedback_compress,

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.data.vision import digits_batch, textures_batch
-from repro.models.paper import CNV, LFC, SFC, TFC, build_paper_model
+from repro.models.paper import CNV, SFC, TFC, build_paper_model
 from repro.nn.module import unbox
 
 KEY = jax.random.PRNGKey(0)

@@ -82,7 +82,6 @@ def test_engine_queue_and_eos():
 
 def test_bika_serve_phase_runs():
     """Hardware-form (int8 tau + packed signs) params serve end-to-end."""
-    from repro.nn.linear import linear_to_serve
     cfg = get_smoke("smollm-360m", compute_mode="bika", remat=False)
     # train params -> serve params via per-leaf conversion happens at the
     # linear level; here we build the serve-phase model and init directly.
