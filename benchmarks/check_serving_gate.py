@@ -10,7 +10,16 @@ Fails (exit 1) when, for any benched mode:
 - the paged row's goodput falls more than ``--max-paged-loss`` below the
   dense continuous row (paged bookkeeping must stay ~free), or
 - the shared-prefix workload shows no prefix-cache hits at all (the reuse
-  path silently dead).
+  path silently dead), or
+- (when set) the long-decode row fails its bounds: ``--min-fused-tpot-ratio``
+  floors the gather/fused TPOT ratio — on CPU CI this is an *emulator-
+  relative regression backstop* (interpret-mode Pallas loses wall-clock to
+  XLA; the floor sits below the measured emulator ratio and catches a
+  fused route that suddenly got pathologically slower), NOT a speedup
+  claim — while ``--min-fused-hbm-ratio`` (modeled decode HBM traffic,
+  computed from real leaf dtypes — the ratio a TPU run banks) and
+  ``--min-int8-capacity`` (fp32/int8 pool bytes-per-token) gate the wins
+  that are stable on any host.
 
 TTFT improvement on the shared-prefix workload is reported but warn-only:
 wall-clock latency on shared CI runners is too noisy to hard-gate.
@@ -22,7 +31,9 @@ import json
 import sys
 
 
-def check(payload: dict, *, min_ratio: float, max_paged_loss: float) -> int:
+def check(payload: dict, *, min_ratio: float, max_paged_loss: float,
+          min_fused_tpot_ratio: float = 0.0, min_int8_capacity: float = 0.0,
+          min_fused_hbm_ratio: float = 0.0) -> int:
     failures = []
     results = payload.get("results", {})
     if not results:
@@ -68,6 +79,46 @@ def check(payload: dict, *, min_ratio: float, max_paged_loss: float) -> int:
                       f"{gain:.2f}x < 1.0x (warn-only: CI wall clock is noisy)")
             elif gain is not None:
                 print(f"[{mode}] shared-prefix ttft improvement {gain:.2f}x")
+        long = row.get("long_decode")
+        if min_fused_tpot_ratio > 0 or min_int8_capacity > 0 or min_fused_hbm_ratio > 0:
+            if not long:
+                failures.append(f"[{mode}] missing long_decode row")
+                continue
+        if long and min_fused_tpot_ratio > 0:
+            tr = long.get("tpot_ratio_gather_over_fused")
+            if tr is None:
+                failures.append(f"[{mode}] long_decode missing tpot ratio")
+            elif tr < min_fused_tpot_ratio:
+                failures.append(
+                    f"[{mode}] long-decode gather/fused TPOT {tr:.2f}x < "
+                    f"{min_fused_tpot_ratio}x (fused route regressed at "
+                    f"max_len={long.get('max_len')})"
+                )
+            else:
+                print(f"[{mode}] long-decode gather/fused TPOT {tr:.2f}x >= "
+                      f"{min_fused_tpot_ratio}x (max_len={long.get('max_len')})")
+        if long and min_fused_hbm_ratio > 0:
+            hr = long.get("hbm_ratio_gather_over_fused")
+            if hr is None:
+                failures.append(f"[{mode}] long_decode missing HBM ratio")
+            elif hr < min_fused_hbm_ratio:
+                failures.append(
+                    f"[{mode}] modeled gather/fused decode HBM ratio "
+                    f"{hr:.2f}x < {min_fused_hbm_ratio}x"
+                )
+            else:
+                print(f"[{mode}] modeled gather/fused decode HBM ratio "
+                      f"{hr:.2f}x >= {min_fused_hbm_ratio}x")
+        if long and min_int8_capacity > 0:
+            cap = long.get("int8_context_per_byte_ratio") or 0.0
+            if cap < min_int8_capacity:
+                failures.append(
+                    f"[{mode}] int8 context-per-byte {cap:.2f}x < "
+                    f"{min_int8_capacity}x"
+                )
+            else:
+                print(f"[{mode}] int8 context-per-byte {cap:.2f}x >= "
+                      f"{min_int8_capacity}x")
     for f in failures:
         print(f"GATE FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -80,10 +131,22 @@ def main(argv=None) -> int:
                     help="minimum continuous/static goodput ratio")
     ap.add_argument("--max-paged-loss", type=float, default=0.10,
                     help="maximum paged-vs-continuous goodput loss fraction")
+    ap.add_argument("--min-fused-tpot-ratio", type=float, default=0.0,
+                    help="long-decode gate: minimum gather/fused TPOT ratio "
+                         "(>1 means the fused route is faster; 0 = skip)")
+    ap.add_argument("--min-int8-capacity", type=float, default=0.0,
+                    help="long-decode gate: minimum fp32/int8 KV "
+                         "bytes-per-token ratio (0 = skip)")
+    ap.add_argument("--min-fused-hbm-ratio", type=float, default=0.0,
+                    help="long-decode gate: minimum modeled gather/fused "
+                         "decode HBM-bytes-per-token ratio (0 = skip)")
     args = ap.parse_args(argv)
     with open(args.bench_json) as fh:
         payload = json.load(fh)
-    rc = check(payload, min_ratio=args.min_ratio, max_paged_loss=args.max_paged_loss)
+    rc = check(payload, min_ratio=args.min_ratio, max_paged_loss=args.max_paged_loss,
+               min_fused_tpot_ratio=args.min_fused_tpot_ratio,
+               min_int8_capacity=args.min_int8_capacity,
+               min_fused_hbm_ratio=args.min_fused_hbm_ratio)
     print("serving gate:", "FAIL" if rc else "PASS")
     return rc
 

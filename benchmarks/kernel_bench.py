@@ -189,6 +189,46 @@ def main(quick: bool = True) -> List[str]:
                 f"{t_qnnp / t_bnnp:.2f}x of pallas-bnn (int8 beats + fused "
                 "dequant)", rows)
 
+        # -- paged attention: fused block-walk kernel vs the XLA gather
+        # oracle across a (n_slots, max_len, block_size) grid, fp32 and
+        # int8 pools. Emulator-relative like every interpret-mode row; the
+        # serving-level TPOT comparison lives in serving_bench.py.
+        import numpy as _np
+
+        from repro.kernels import ref as _ref
+        gather_jit = jax.jit(_ref.paged_attention_ref)
+        hqa, hkva, da = 4, 2, 16
+        for ns, ml, bsz in ((2, 64, 8), (2, 128, 16), (4, 128, 16)):
+            tt = ml // bsz
+            npb = ns * tt + 1
+            kq = jax.random.split(jax.random.PRNGKey(ns * ml), 3)
+            qa = jax.random.normal(kq[0], (ns, 1, hqa, da))
+            tbl = jnp.asarray(_np.arange(ns * tt, dtype=_np.int32).reshape(ns, tt))
+            qp = jnp.full((ns, 1), 3 * ml // 4 - 1, jnp.int32)
+            for quant in (False, True):
+                if quant:
+                    ka = jax.random.randint(kq[1], (npb, bsz, hkva, da),
+                                            -127, 128, jnp.int8)
+                    va = jax.random.randint(kq[2], (npb, bsz, hkva, da),
+                                            -127, 128, jnp.int8)
+                    sc = jnp.full((npb, bsz, hkva, 1), 0.01, jnp.float32)
+                    scales = dict(k_scale=sc, v_scale=sc)
+                else:
+                    ka = jax.random.normal(kq[1], (npb, bsz, hkva, da))
+                    va = jax.random.normal(kq[2], (npb, bsz, hkva, da))
+                    scales = {}
+                tag = f"s{ns}_L{ml}_b{bsz}" + ("_int8" if quant else "")
+                t_g = timed(lambda: gather_jit(qa, ka, va, tbl, qp, **scales),
+                            iters=2, warmup=1)
+                t_f = timed(lambda: ops.paged_attention(qa, ka, va, tbl, qp,
+                                                        **scales),
+                            iters=2, warmup=1)
+                _record(results, f"paged_gather_{tag}", t_g,
+                        "1.00x baseline (XLA gather + full softmax)", rows)
+                _record(results, f"paged_fused_{tag}", t_f,
+                        f"{t_f / t_g:.2f}x of gather (block-walk online "
+                        "softmax; emulator-relative)", rows)
+
         t_def = timed(lambda: ops.cac_matmul(xb, tb, sb, **fixed),
                       iters=2, warmup=1)
         t_tuned = timed(lambda: ops.cac_matmul(xb, tb, sb, **bl),

@@ -24,6 +24,13 @@ the paged engine's prefix cache serves the system prompt from cached blocks
 after the first admission and the reported ``ttft_improvement`` isolates
 that win.
 
+Long-decode rows (``results[mode]["long_decode"]``): decode-heavy traffic at
+``--long-max-len`` through BOTH paged-attention routes — the fused
+block-walk kernel vs the XLA gather oracle — on the identical trace, plus
+the modeled decode HBM-bytes-per-token of each route and the int8 pool's
+context-per-byte ratio. check_serving_gate.py bounds the fused route's TPOT
+and the int8 capacity from these rows.
+
 Multi-device row: unless ``--no-multi-device``, the bench re-execs itself in
 a subprocess with 8 forced host devices (``XLA_FLAGS``, as in
 test_distributed) and ``--tp 2``, running the continuous engine
@@ -197,6 +204,64 @@ def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
         out["blocks_in_use_peak"] = sched.metrics.blocks_in_use_peak
         out["admission_deferrals"] = sched.metrics.admission_deferrals
         out["prefix_evictions"] = sched.metrics.prefix_evictions
+        out["kv_pool_bytes"] = sched.metrics.kv_pool_bytes
+        out["kv_bytes_per_token"] = sched.metrics.kv_bytes_per_token
+        out["kv_bytes_in_use_peak"] = sched.metrics.kv_bytes_in_use_peak
+        out["decode_hbm_bytes_per_token"] = sched.metrics.decode_hbm_bytes_per_token
+    return out
+
+
+def run_long_decode(mode: str, args) -> Dict:
+    """Decode-heavy traffic at large max_len through BOTH paged attention
+    routes on the identical trace: short prompts, long token budgets, so
+    nearly all time is decode ticks over deep KV windows — the regime the
+    fused block-walk kernel targets (the gather route re-materializes each
+    row's full window per tick). Also reports the int8 pool's
+    context-per-byte win vs the fp32 pool."""
+    arch0 = get_smoke(args.arch, compute_mode=mode, remat=False)
+    if mode == "bika":
+        arch0 = arch0.replace(pack_signs=True)
+    ml = args.long_max_len
+    n_req = max(4, args.requests // 8)
+    mk = lambda: make_workload(
+        np.random.RandomState(args.seed + 2), n_req, arch0.vocab,
+        arrival_rate=args.arrival_rate, plen_range=(3, 8),
+        ntok_range=(ml // 4, ml // 2),
+    )
+    out: Dict = {"max_len": ml, "n_requests": n_req}
+    params = None
+    for route in ("fused", "gather"):
+        arch = arch0.replace(paged_attn_route=route)
+        api = build_model(arch, phase="serve")
+        if params is None:
+            params = unbox(api.init(jax.random.PRNGKey(0)))
+        out[route] = run_continuous(
+            api, params, arch, mk(), n_slots=args.n_slots, max_len=ml,
+            warmup=not args.no_warmup, engine="paged",
+            block_size=args.kv_block_size, chunk=args.prefill_chunk)
+    f, g = out["fused"]["tpot_mean_s"], out["gather"]["tpot_mean_s"]
+    out["tpot_ratio_gather_over_fused"] = (g / f) if f else None
+    out["hbm_ratio_gather_over_fused"] = (
+        out["gather"]["decode_hbm_bytes_per_token"]
+        / out["fused"]["decode_hbm_bytes_per_token"]
+        if out["fused"]["decode_hbm_bytes_per_token"] else None)
+    # int8 pool capacity: bytes per logical token, fp32 vs int8 pool
+    api = build_model(arch0, phase="serve")
+    bpt = {}
+    for quant in (False, True):
+        eng = ServeEngine(api, params, arch0, max_len=ml, engine="paged",
+                          n_slots=args.n_slots, kv_block_size=args.kv_block_size,
+                          prefill_chunk=args.prefill_chunk, quantized_kv=quant)
+        bpt[quant] = eng.scheduler.kv.bytes_per_token
+    out["kv_bytes_per_token_fp32"] = bpt[False]
+    out["kv_bytes_per_token_int8"] = bpt[True]
+    out["int8_context_per_byte_ratio"] = bpt[False] / bpt[True]
+    print(f"[{mode}] long-decode max_len={ml}: tpot fused "
+          f"{f:.4f}s vs gather {g:.4f}s "
+          f"({out['tpot_ratio_gather_over_fused']:.2f}x) | modeled HBM/token "
+          f"{out['fused']['decode_hbm_bytes_per_token']:.0f} vs "
+          f"{out['gather']['decode_hbm_bytes_per_token']:.0f} B | int8 capacity "
+          f"{out['int8_context_per_byte_ratio']:.2f}x")
     return out
 
 
@@ -268,9 +333,10 @@ def bench_mode(mode: str, args, mesh=None) -> Dict:
     print(f"[{mode}] shared-prefix: paged hit rate "
           f"{sp_paged['prefix_hit_rate']:.2f} | ttft {sp_cont['ttft_mean_s']:.4f}s "
           f"-> {sp_paged['ttft_mean_s']:.4f}s ({ttft_gain:.2f}x)")
+    long_decode = run_long_decode(mode, args)
     return {"static": static, "continuous": cont, "continuous_paged": paged,
             "goodput_ratio": ratio, "paged_goodput_ratio": paged_ratio,
-            "shared_prefix": shared}
+            "shared_prefix": shared, "long_decode": long_decode}
 
 
 def multi_device_row(args) -> Optional[Dict]:
@@ -337,6 +403,9 @@ def main(argv=None) -> int:
                     help="paged engine: chunked-prefill chunk length")
     ap.add_argument("--sys-prompt", type=int, default=24,
                     help="shared-prefix workload: system prompt length")
+    ap.add_argument("--long-max-len", type=int, default=256,
+                    help="long-decode workload: paged max_len (decode-heavy "
+                         "fused-vs-gather TPOT A/B)")
     ap.add_argument("--no-warmup", action="store_true")
     ap.add_argument("--tp", type=int, default=0,
                     help="run the continuous engine tensor-parallel on a "

@@ -41,6 +41,10 @@ __all__ = [
     "cache_key",
     "cache_path",
     "clear_cache",
+    "paged_attn_cache_key",
+    "heuristic_paged_blocks",
+    "get_paged_blocks",
+    "measured_paged_blocks",
 ]
 
 DEFAULT_BLOCKS = dict(block_m=256, block_n=256, block_k=512)
@@ -317,4 +321,135 @@ def measured_blocks(
     if best is None:
         best = _clamp(m, k, n, heuristic_blocks(m, k, n, path))
     _store_cache(_cache_key(path, m, k, n), best)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# "paged_attn" path: the fused paged-attention kernel (kernels/paged_attn.py)
+# ---------------------------------------------------------------------------
+#
+# Not an (M, K, N) contraction — the problem is keyed on the serving shape
+# ``(n_slots, max_len, block_size, hd)`` (+ kv_heads, which the only tunable
+# must divide) and the block table has one knob: ``block_h``, the kv heads
+# folded into one grid step. Each step's VMEM working set is
+# ``2 * block_size * block_h * hd`` pool elements (k + v) plus the per-step
+# q/accumulator tiles, so block_h trades grid-step count against VMEM
+# pressure exactly like block_k_sub does for the matmul beats. The same
+# on-disk JSON cache stores measured winners under ``paged_attn_cache_key``.
+
+PAGED_ATTN_PATH = "paged_attn"
+
+
+def paged_attn_cache_key(n_slots: int, max_len: int, block_size: int,
+                         hd: int, kv_heads: int) -> str:
+    """Cache-key form of the paged-attention problem shape:
+    ``backend:paged_attn:SxLxBxDxH``."""
+    return (f"{jax.default_backend()}:{PAGED_ATTN_PATH}:"
+            f"{n_slots}x{max_len}x{block_size}x{hd}x{kv_heads}")
+
+
+def heuristic_paged_blocks(n_slots: int, max_len: int, block_size: int,
+                           hd: int, kv_heads: int) -> Dict[str, int]:
+    """Largest divisor of kv_heads whose (k + v) step tile stays inside the
+    sub-tile budget. Serving shapes are small enough that this is usually
+    ``kv_heads`` itself (one grid step per (row, block))."""
+    bh = max(kv_heads, 1)
+    while bh > 1 and 2 * block_size * bh * hd > SUBTILE_BUDGET:
+        bh -= 1
+    while kv_heads % bh:
+        bh -= 1
+    return {"block_h": bh}
+
+
+def _clamp_paged(kv_heads: int, bl: Dict[str, int]) -> Dict[str, int]:
+    bh = max(1, min(int(bl.get("block_h", kv_heads)), max(kv_heads, 1)))
+    while kv_heads % bh:
+        bh -= 1
+    return {"block_h": bh}
+
+
+def get_paged_blocks(
+    n_slots: int,
+    max_len: int,
+    block_size: int,
+    hd: int,
+    kv_heads: int,
+    overrides: Optional[Dict[str, int]] = None,
+    use_cache: bool = True,
+) -> Dict[str, int]:
+    """Resolve ``{"block_h"}`` for one paged-attention call site. Same
+    priority order as ``get_blocks``: explicit overrides > measured cache >
+    heuristic, clamped to a divisor of kv_heads."""
+    bl = heuristic_paged_blocks(n_slots, max_len, block_size, hd, kv_heads)
+    if use_cache:
+        hit = _load_cache().get(
+            paged_attn_cache_key(n_slots, max_len, block_size, hd, kv_heads))
+        if hit:
+            bl.update(hit)
+    if overrides:
+        ov = {k_: int(v) for k_, v in overrides.items() if v is not None}
+        unknown = set(ov) - {"block_h"}
+        if unknown:
+            raise TypeError(f"unknown paged_attn override(s): {sorted(unknown)}")
+        bl.update(ov)
+    return _clamp_paged(kv_heads, bl)
+
+
+def measured_paged_blocks(
+    n_slots: int,
+    max_len: int,
+    block_size: int,
+    hd: int,
+    kv_heads: int,
+    *,
+    n_heads: Optional[int] = None,
+    candidates=None,
+    iters: int = 3,
+    warmup: int = 1,
+    interpret: Optional[bool] = None,
+    seed: int = 0,
+) -> Dict[str, int]:
+    """Time the fused kernel on a synthetic pool over the block_h divisors of
+    kv_heads; persist + return the winner (same on-disk cache as
+    ``measured_blocks``)."""
+    import time
+
+    import jax.numpy as jnp
+
+    from . import ops  # deferred: ops imports this module
+
+    hq = n_heads or kv_heads
+    t = max_len // block_size
+    n_phys = n_slots * t + 1
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (n_slots, 1, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (n_phys, block_size, kv_heads, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (n_phys, block_size, kv_heads, hd), jnp.float32)
+    import numpy as np
+
+    tables = jnp.asarray(
+        np.arange(n_slots * t, dtype=np.int32).reshape(n_slots, t))
+    q_pos = jnp.full((n_slots, 1), max(3 * max_len // 4 - 1, 0), jnp.int32)
+
+    if candidates is None:
+        candidates = [bh for bh in range(1, kv_heads + 1) if kv_heads % bh == 0]
+    best, best_t = None, float("inf")
+    for bh in candidates:
+        cl = _clamp_paged(kv_heads, {"block_h": bh})
+        fn = lambda: ops.paged_attention(q, k, v, tables, q_pos,
+                                         interpret=interpret, **cl)
+        try:
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(fn())
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:
+            continue
+        if dt < best_t:
+            best, best_t = cl, dt
+    if best is None:
+        best = heuristic_paged_blocks(n_slots, max_len, block_size, hd, kv_heads)
+    _store_cache(paged_attn_cache_key(n_slots, max_len, block_size, hd, kv_heads), best)
     return best

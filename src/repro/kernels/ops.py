@@ -49,6 +49,7 @@ from .cac_matmul import (
     cac_train_bwd_fused_call,
     cac_train_fwd_call,
 )
+from .paged_attn import paged_attn_kernel_call
 from .qnn_matmul import qnn_matmul_kernel_call
 
 __all__ = [
@@ -58,6 +59,7 @@ __all__ = [
     "bnn_matmul_packed",
     "bnn_train_matmul",
     "qnn_matmul",
+    "paged_attention",
     "KERNEL_ROUTES",
     "kernel_route",
 ]
@@ -426,6 +428,69 @@ def qnn_matmul(
 
 
 # ---------------------------------------------------------------------------
+# Fused paged attention (serving decode / chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def paged_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    tables: jax.Array,
+    q_pos: jax.Array,
+    *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
+    interpret: Optional[bool] = None,
+    **blocks,
+) -> jax.Array:
+    """Fused block-table attention (kernels/paged_attn.py): online-softmax
+    walk over each row's physical blocks, no gathered KV copy. With
+    ``k_scale``/``v_scale`` the int8 pool is dequantized inside the beat.
+
+    q: (B, C, Hq, D); k/v: one pool layer (n_phys, bs, Hkv, D); tables:
+    (B, T) int32; q_pos: (B, C) int32. ``**blocks`` overrides the autotuned
+    ``block_h`` (kv heads per grid step; "paged_attn" path).
+
+    Tensor parallelism: attention is embarrassingly parallel over kv-head
+    groups, so under an active model-axis mesh the call shard_maps with
+    every head dim split — each device runs the unmodified kernel on its
+    heads, bit-identical to the unsharded kernel. When the head counts
+    don't divide the axis it falls back to the pure-XLA gather oracle
+    (kernels/ref.py), which GSPMD partitions freely."""
+    b, c, hq, d = q.shape
+    bs, hkv = k.shape[1], k.shape[2]
+    bl = autotune.get_paged_blocks(
+        b, tables.shape[1] * bs, bs, d, hkv, overrides=blocks or None)
+    impl = functools.partial(paged_attn_kernel_call,
+                             block_h=bl["block_h"],
+                             interpret=_auto_interpret(interpret))
+    mesh = _tp_mesh()
+    scales = () if k_scale is None else (k_scale, v_scale)
+    if mesh is None:
+        return impl(q, k, v, tables, q_pos,
+                    k_scale=k_scale, v_scale=v_scale)
+    tp = int(mesh.shape[TP_AXIS])
+    if hq % tp or hkv % tp:
+        return ref.paged_attention_ref(q, k, v, tables, q_pos, k_scale, v_scale)
+    hspec = PartitionSpec(None, None, TP_AXIS, None)
+
+    def sharded(qs, ks, vs, tbl, qp, *sc):
+        ksc, vsc = sc if sc else (None, None)
+        return impl(qs, ks, vs, tbl, qp, k_scale=ksc, v_scale=vsc)
+
+    fn = shard_map(
+        sharded,
+        mesh=mesh,
+        in_specs=(hspec, hspec, hspec, PartitionSpec(), PartitionSpec())
+        + (hspec,) * len(scales),
+        out_specs=hspec,
+        check_rep=False,
+    )
+    return fn(q, k, v, tables, q_pos, *scales)
+
+
+# ---------------------------------------------------------------------------
 # Kernel-route table: the names QuantBackend.kernel_route resolves against
 # ---------------------------------------------------------------------------
 
@@ -436,6 +501,9 @@ KERNEL_ROUTES: dict = {
     "bnn_packed": bnn_matmul_packed,
     "bnn_train": bnn_train_matmul,
     "qnn8": qnn_matmul,
+    # serving attention (not a matmul route, but resolved the same way:
+    # nn/attention.py selects it against the gather fallback per AttnConfig)
+    "paged_attn": paged_attention,
 }
 
 

@@ -13,6 +13,7 @@ __all__ = [
     "cac_train_bwd_ref",
     "bnn_matmul_ref",
     "qnn_matmul_ref",
+    "paged_attention_ref",
 ]
 
 
@@ -64,3 +65,45 @@ def qnn_matmul_ref(
         x_int.astype(jnp.int32), w_int.astype(jnp.int32), preferred_element_type=jnp.int32
     )
     return acc.astype(jnp.float32) * (w_scale.astype(jnp.float32) * x_scale)
+
+
+def paged_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    tables: jax.Array,
+    q_pos: jax.Array,
+    k_scale: jax.Array = None,
+    v_scale: jax.Array = None,
+) -> jax.Array:
+    """Gather-based oracle for the fused paged-attention kernel: assemble
+    each row's logical KV window from the block pool, then one full (not
+    online) fp32 softmax under the same ``kv_pos <= q_pos`` mask. Pure XLA,
+    so GSPMD partitions it freely — it doubles as the tensor-parallel
+    fallback when head counts don't divide the model axis.
+
+    q: (B, C, Hq, D); k/v: (n_phys, bs, Hkv, D); tables: (B, T) int32;
+    q_pos: (B, C) int32; scales: (n_phys, bs, Hkv, 1) f32 for int8 pools.
+    """
+    b, c, hq, d = q.shape
+    bs, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+
+    def gather(leaf):  # (B, T, bs, H, D|1) -> (B, T*bs, H, D|1)
+        w = leaf[tables]
+        return w.reshape(b, w.shape[1] * bs, *w.shape[3:])
+
+    kw, vw = gather(k), gather(v)
+    if k_scale is not None:
+        kw = kw.astype(jnp.float32) * gather(k_scale)
+        vw = vw.astype(jnp.float32) * gather(v_scale)
+    qg = q.astype(jnp.float32).reshape(b, c, hkv, g, d)
+    s = jnp.einsum("bchgd,bthd->bchgt", qg, kw.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(jnp.float32(d))
+    kvp = jnp.arange(kw.shape[1], dtype=jnp.int32)
+    mask = kvp[None, None] <= q_pos[:, :, None]  # (B, C, T*bs)
+    s = jnp.where(mask[:, :, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bchgt,bthd->bchgd", p, vw.astype(jnp.float32))
+    return out.reshape(b, c, hq, d).astype(q.dtype)

@@ -73,6 +73,10 @@ def main(argv=None) -> int:
     ap.add_argument("--no-prefix-cache", dest="prefix_cache", action="store_false")
     ap.add_argument("--prefill-chunk", type=int, default=32,
                     help="paged engine: chunked-prefill chunk length")
+    ap.add_argument("--paged-attn-route", default="fused",
+                    choices=("fused", "gather"),
+                    help="paged attention: fused block-table kernel (default) "
+                         "or the XLA gather oracle")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = submit all up front)")
     ap.add_argument("--tp", type=int, default=0,
@@ -87,6 +91,8 @@ def main(argv=None) -> int:
     arch = getter(args.arch, compute_mode=args.mode, remat=False)
     if args.mode == "bika":
         arch = arch.replace(pack_signs=True)
+    if args.paged_attn_route != arch.paged_attn_route:
+        arch = arch.replace(paged_attn_route=args.paged_attn_route)
     api = build_model(arch, phase="serve")
     params = unbox(api.init(jax.random.PRNGKey(0)))
     print(f"[serve] {arch.name} mode={args.mode} params={param_bytes(params):,} B")
@@ -137,6 +143,10 @@ def main(argv=None) -> int:
                   f"blocks peak={m['blocks_in_use_peak']} "
                   f"chunks={m['prefill_chunks']} "
                   f"deferrals={m['admission_deferrals']}")
+        print(f"[serve] kv pool={m['kv_pool_bytes']:,} B "
+              f"({m['kv_bytes_per_token']:.0f} B/token) "
+              f"in-use peak={m['kv_bytes_in_use_peak']:,} B "
+              f"decode HBM/token={m['decode_hbm_bytes_per_token']:.0f} B")
     return 0
 
 

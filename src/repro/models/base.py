@@ -146,6 +146,9 @@ class ArchConfig:
     block_q: int = 256
     remat: bool = True
     tp_pad_heads: bool = False  # pad attention heads to the TP axis (§Perf)
+    # paged serving attention: "fused" block-table Pallas kernel (default) |
+    # "gather" XLA paged_gather oracle (bit-parity vs dense decode)
+    paged_attn_route: str = "fused"
     # capability flags
     full_attention: bool = True  # True -> long_500k skipped (quadratic)
 

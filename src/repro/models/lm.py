@@ -50,6 +50,7 @@ def _attn_cfg(cfg: ArchConfig) -> AttnConfig:
         qkv_bias=cfg.qkv_bias,
         block_q=cfg.block_q,
         tp_pad_heads=cfg.tp_pad_heads,
+        paged_route=cfg.paged_attn_route,
     )
 
 

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.distributed.constraints import constrain
+from repro.kernels import ops as kernel_ops
 from .linear import LinearSpec, linear_apply, linear_init
 from .rotary import apply_rope
 
@@ -55,6 +56,11 @@ class AttnConfig:
     # tensor-parallelizes when n_heads doesn't divide it (smollm: 15 heads vs
     # model=16 otherwise replicates the whole attention — §Perf hillclimb).
     tp_pad_heads: bool = False
+    # paged serving attention route: "fused" walks the block table through
+    # the Pallas online-softmax kernel (kernels/paged_attn.py, the default);
+    # "gather" keeps the XLA paged_gather + dot_attention path, which is the
+    # bit-parity oracle against the dense per-row decode.
+    paged_route: str = "fused"
 
 
 def _tp_size() -> int:
@@ -443,12 +449,16 @@ def attn_decode_step_paged(
 
     ``position``: (B,) per-row next-write positions; ``table``: (B, T) block
     tables (T = max_len // block_size). The new K/V is scattered at physical
-    ``(table[i, p // bs], p % bs)``, then the pool is gathered back into
-    per-row ``(B, max_len, ...)`` views — the same bytes, positions and masks
-    as the dense per-row ``attn_decode_step``, so outputs are bit-identical.
-    Inactive rows must point their whole table at the reserved parking block
-    (their junk writes race only with each other). SWA is unsupported: a
-    ring cache has no block-aligned logical order to page.
+    ``(table[i, p // bs], p % bs)``; then attention routes per
+    ``cfg.paged_route``: the default ``"fused"`` walks the block table
+    through the Pallas online-softmax kernel (one pass over the pool, no
+    gathered copy, fused int8 dequant — token-for-token the gather route's
+    outputs within float rounding), while ``"gather"`` assembles per-row
+    ``(B, max_len, ...)`` views — the same bytes, positions and masks as the
+    dense per-row ``attn_decode_step``, so gather outputs are bit-identical
+    to dense. Inactive rows must point their whole table at the reserved
+    parking block (their junk writes race only with each other). SWA is
+    unsupported: a ring cache has no block-aligned logical order to page.
     """
     assert cfg.window is None, "paged decode does not support sliding-window caches"
     b = x.shape[0]
@@ -479,27 +489,37 @@ def attn_decode_step_paged(
             "k_scale": write(cache["k_scale"], ks),
             "v_scale": write(cache["v_scale"], vs),
         }
-        k_all = _dequantize_kv(
-            paged_gather(new_cache["k"], table), paged_gather(new_cache["k_scale"], table), x.dtype
-        )
-        v_all = _dequantize_kv(
-            paged_gather(new_cache["v"], table), paged_gather(new_cache["v_scale"], table), x.dtype
-        )
     else:
         new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
-        k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
-        v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
 
-    max_len = table.shape[1] * bs
-    out = dot_attention(
-        q,
-        k_all,
-        v_all,
-        q_positions=pos,
-        kv_positions=jnp.arange(max_len),
-        causal=True,
-        kv_valid_len=position + 1,
-    )
+    if cfg.paged_route == "fused":
+        out = kernel_ops.paged_attention(
+            q, new_cache["k"], new_cache["v"], table, pos,
+            k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
+        )
+    else:
+        if quantized:
+            k_all = _dequantize_kv(
+                paged_gather(new_cache["k"], table),
+                paged_gather(new_cache["k_scale"], table), x.dtype,
+            )
+            v_all = _dequantize_kv(
+                paged_gather(new_cache["v"], table),
+                paged_gather(new_cache["v_scale"], table), x.dtype,
+            )
+        else:
+            k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
+            v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
+        max_len = table.shape[1] * bs
+        out = dot_attention(
+            q,
+            k_all,
+            v_all,
+            q_positions=pos,
+            kv_positions=jnp.arange(max_len),
+            causal=True,
+            kv_valid_len=position + 1,
+        )
     y = linear_apply(params["wo"], out.reshape(b, 1, -1), spec, phase=phase)
     return y, new_cache
 
@@ -564,24 +584,36 @@ def attn_prefill_chunk(
             "k_scale": write(cache["k_scale"], ks),
             "v_scale": write(cache["v_scale"], vs),
         }
-        k_all = _dequantize_kv(
-            paged_gather(new_cache["k"], table), paged_gather(new_cache["k_scale"], table), x.dtype
-        )
-        v_all = _dequantize_kv(
-            paged_gather(new_cache["v"], table), paged_gather(new_cache["v_scale"], table), x.dtype
-        )
     else:
         new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
-        k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
-        v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
 
-    out = dot_attention(
-        q,
-        k_all,
-        v_all,
-        q_positions=lp,
-        kv_positions=jnp.arange(max_len),
-        causal=True,
-    )
+    if cfg.paged_route == "fused":
+        # the chunk's own keys were just scattered, so the block walk sees
+        # them; intra-chunk causality is the same kv_pos <= q_pos mask
+        out = kernel_ops.paged_attention(
+            q, new_cache["k"], new_cache["v"], table, lp,
+            k_scale=new_cache.get("k_scale"), v_scale=new_cache.get("v_scale"),
+        )
+    else:
+        if quantized:
+            k_all = _dequantize_kv(
+                paged_gather(new_cache["k"], table),
+                paged_gather(new_cache["k_scale"], table), x.dtype,
+            )
+            v_all = _dequantize_kv(
+                paged_gather(new_cache["v"], table),
+                paged_gather(new_cache["v_scale"], table), x.dtype,
+            )
+        else:
+            k_all = paged_gather(new_cache["k"], table).astype(x.dtype)
+            v_all = paged_gather(new_cache["v"], table).astype(x.dtype)
+        out = dot_attention(
+            q,
+            k_all,
+            v_all,
+            q_positions=lp,
+            kv_positions=jnp.arange(max_len),
+            causal=True,
+        )
     y = linear_apply(params["wo"], out.reshape(b, c, -1), spec, phase=phase)
     return y, new_cache

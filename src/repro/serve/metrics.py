@@ -94,13 +94,33 @@ class RunMetrics:
     prefix_evictions: int = 0  # LRU evictions of cached blocks
     blocks_in_use_peak: int = 0  # high-water mark of pool blocks in use
     admission_deferrals: int = 0  # ticks the queue head waited for blocks
+    # KV byte accounting (DESIGN.md §7): pool footprint plus a *modeled*
+    # decode HBM-read figure — fused paged attention reads each row's live
+    # pool window once; the gather route additionally writes and re-reads a
+    # dense copy (3x), expanding int8 windows to f32 on the way.
+    kv_pool_bytes: int = 0  # device bytes of the whole KV pool/cache
+    kv_bytes_per_token: float = 0.0  # pool bytes per logical KV position
+    kv_bytes_in_use_peak: int = 0  # high-water mark of referenced pool bytes
+    decode_kv_bytes_read: int = 0  # modeled KV bytes moved by decode steps
+    decode_rows: int = 0  # active decode rows summed over steps
 
-    def record_step(self, n_active: int) -> None:
+    def record_step(self, n_active: int, kv_bytes_read: int = 0) -> None:
         self.decode_steps += 1
         self._occupancy_sum += n_active / max(self.n_slots, 1)
+        self.decode_rows += n_active
+        self.decode_kv_bytes_read += kv_bytes_read
 
-    def record_blocks(self, in_use: int) -> None:
+    def record_blocks(self, in_use: int, bytes_in_use: int = 0) -> None:
         self.blocks_in_use_peak = max(self.blocks_in_use_peak, in_use)
+        self.kv_bytes_in_use_peak = max(self.kv_bytes_in_use_peak, bytes_in_use)
+
+    @property
+    def decode_hbm_bytes_per_token(self) -> float:
+        """Modeled KV bytes read from HBM per decoded token — the figure the
+        fused kernel cuts (1x window vs the gather route's 3x + dequant)."""
+        if not self.decode_rows:
+            return 0.0
+        return self.decode_kv_bytes_read / self.decode_rows
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -147,6 +167,11 @@ class RunMetrics:
             "prefix_evictions": self.prefix_evictions,
             "blocks_in_use_peak": self.blocks_in_use_peak,
             "admission_deferrals": self.admission_deferrals,
+            "kv_pool_bytes": self.kv_pool_bytes,
+            "kv_bytes_per_token": self.kv_bytes_per_token,
+            "kv_bytes_in_use_peak": self.kv_bytes_in_use_peak,
+            "decode_kv_bytes_read": self.decode_kv_bytes_read,
+            "decode_hbm_bytes_per_token": self.decode_hbm_bytes_per_token,
             "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
             "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
             "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,

@@ -178,6 +178,32 @@ class PagedKVManager:
     def blocks_in_use(self) -> int:
         return self.n_blocks - self.blocks_free
 
+    @property
+    def bytes_per_block(self) -> int:
+        """Device bytes one physical block costs across every cache leaf and
+        layer (int8 pools count their per-position scales). Global bytes —
+        under a mesh this is the whole sharded pool, not one device's part."""
+        return sum(
+            leaf.nbytes // self.layout.n_phys_blocks
+            for leaf in jax.tree_util.tree_leaves(self.cache)
+        )
+
+    @property
+    def pool_bytes(self) -> int:
+        """Total device bytes of the block pool (parking block included)."""
+        return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(self.cache))
+
+    @property
+    def kv_bytes_in_use(self) -> int:
+        """Bytes of pool actually referenced by live or cached blocks."""
+        return self.bytes_per_block * self.blocks_in_use
+
+    @property
+    def bytes_per_token(self) -> float:
+        """KV bytes one logical token position costs — the capacity figure
+        the int8 pool shrinks ~4x (int8 payload + f32 scale vs f32 payload)."""
+        return self.bytes_per_block / self.block_size
+
     def refcount(self, block: int) -> int:
         return int(self._ref[block])
 

@@ -129,6 +129,7 @@ class SlotScheduler:
         self.params = params
         self._init_kv_prefill(api, quantized_kv, min_bucket)
         self.metrics = RunMetrics(n_slots=n_slots)
+        self._stamp_kv_gauges()
         # prefill-compile counter at the start of the current metrics window:
         # BucketedPrefill.misses is cumulative across the scheduler's life,
         # so a timed window must report the delta, not the total (otherwise
@@ -160,6 +161,24 @@ class SlotScheduler:
 
     def _release_slot(self, slot: int) -> None:
         self.kv.free(slot)
+
+    # -- KV byte accounting (DESIGN.md §7) ----------------------------------
+
+    def _kv_pool_bytes(self) -> int:
+        return sum(l.nbytes for l in jax.tree_util.tree_leaves(self.kv.cache))
+
+    def _kv_bytes_per_token(self) -> float:
+        return self._kv_pool_bytes() / (self.n_slots * self.max_len)
+
+    def _stamp_kv_gauges(self) -> None:
+        self.metrics.kv_pool_bytes = self._kv_pool_bytes()
+        self.metrics.kv_bytes_per_token = self._kv_bytes_per_token()
+
+    def _decode_kv_bytes(self, active: List[int]) -> int:
+        """Modeled KV bytes one decode tick reads from HBM: the dense per-row
+        decode streams each active row's live context once."""
+        bpt = self.metrics.kv_bytes_per_token
+        return int(bpt * sum(int(self._pos[i]) + 1 for i in active))
 
     def _run_tick(self) -> np.ndarray:
         with self._mesh_ctx():
@@ -205,6 +224,7 @@ class SlotScheduler:
         it actually triggered."""
         self.metrics = RunMetrics(n_slots=self.n_slots)
         self._prefill_miss_base = self.prefill.misses
+        self._stamp_kv_gauges()
 
     def window_prefill_compiles(self) -> int:
         """Bucketed-jit cache misses since the current metrics window began."""
@@ -284,7 +304,7 @@ class SlotScheduler:
         if not active:
             return False
         nxt = self._run_tick()
-        self.metrics.record_step(len(active))
+        self.metrics.record_step(len(active), kv_bytes_read=self._decode_kv_bytes(active))
         for i in active:
             st = self._slots[i]
             self._tok[i] = nxt[i]
@@ -370,6 +390,12 @@ class PagedSlotScheduler(SlotScheduler):
             api, chunk=self.chunk, max_len=self.max_len, mesh=self.mesh,
             rules=self.rules, param_sh=self._param_sh, cache_sh=self.kv._cache_sh,
         )
+        # f32 bytes of one row's dequantized k+v window — what the gather
+        # route materializes per row when the pool is int8
+        lay = self.kv.layout
+        self._fp_window_bytes = (
+            2 * lay.n_layers * self.max_len * lay.n_kv_heads * lay.head_dim * 4
+        )
 
     @property
     def _slots_available(self) -> int:
@@ -377,6 +403,30 @@ class PagedSlotScheduler(SlotScheduler):
 
     def _release_slot(self, slot: int) -> None:
         self.kv.free_slot(slot)
+
+    def _kv_pool_bytes(self) -> int:
+        return self.kv.pool_bytes
+
+    def _kv_bytes_per_token(self) -> float:
+        return self.kv.bytes_per_token
+
+    def _decode_kv_bytes(self, active: List[int]) -> int:
+        """Modeled per-tick KV HBM traffic of the paged decode routes
+        (DESIGN.md §7). The fused kernel streams each row's *live* blocks
+        once (whole-block skip ends the walk at the row's position); the
+        gather route reads the row's FULL table window from the pool, writes
+        the gathered dense copy, and reads it back for attention (3x), and
+        with an int8 pool additionally materializes the window as f32
+        (dequant write + attention read)."""
+        bpb = self.kv.bytes_per_block
+        bs = self.block_size
+        if self.arch.paged_attn_route == "fused":
+            return int(bpb * sum(-(-(int(self._pos[i]) + 1) // bs) for i in active))
+        window = bpb * self.kv.blocks_per_slot
+        per_row = 3 * window
+        if self.kv.quantized:
+            per_row += 2 * self._fp_window_bytes
+        return int(per_row * len(active))
 
     def _run_tick(self) -> np.ndarray:
         with self._mesh_ctx():
@@ -426,7 +476,8 @@ class PagedSlotScheduler(SlotScheduler):
         self.metrics.prefix_prompt_tokens += plen
         self.metrics.prefix_hit_tokens += cached
         self.metrics.prefix_evictions = self.kv.evictions - self._evict_base
-        self.metrics.record_blocks(self.kv.blocks_in_use)
+        self.metrics.record_blocks(self.kv.blocks_in_use,
+                                   bytes_in_use=self.kv.kv_bytes_in_use)
         req.metrics.t_admit = self.clock()
         # publish this prompt's full blocks before any chance of freeing, so
         # even an instant-EOS request seeds the prefix cache
