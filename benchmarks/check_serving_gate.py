@@ -16,7 +16,11 @@ Fails (exit 1) when, for any benched mode:
   relative regression backstop* (interpret-mode Pallas loses wall-clock to
   XLA; the floor sits below the measured emulator ratio and catches a
   fused route that suddenly got pathologically slower), NOT a speedup
-  claim — while ``--min-fused-hbm-ratio`` (modeled decode HBM traffic,
+  claim. Schema-v2 payloads carry a median-based
+  ``tpot_p50_ratio_gather_over_fused`` which the gate prefers (one
+  straggler tick cannot skew it); older payloads fall back to the
+  mean-based ``tpot_ratio_gather_over_fused`` — while
+  ``--min-fused-hbm-ratio`` (modeled decode HBM traffic,
   computed from real leaf dtypes — the ratio a TPU run banks) and
   ``--min-int8-capacity`` (fp32/int8 pool bytes-per-token) gate the wins
   that are stable on any host.
@@ -85,18 +89,25 @@ def check(payload: dict, *, min_ratio: float, max_paged_loss: float,
                 failures.append(f"[{mode}] missing long_decode row")
                 continue
         if long and min_fused_tpot_ratio > 0:
-            tr = long.get("tpot_ratio_gather_over_fused")
+            # prefer the p50-based ratio (schema v2); fall back to the
+            # mean-based key so pre-v2 payloads still gate
+            tr = long.get("tpot_p50_ratio_gather_over_fused")
+            which = "p50"
+            if tr is None:
+                tr = long.get("tpot_ratio_gather_over_fused")
+                which = "mean"
             if tr is None:
                 failures.append(f"[{mode}] long_decode missing tpot ratio")
             elif tr < min_fused_tpot_ratio:
                 failures.append(
-                    f"[{mode}] long-decode gather/fused TPOT {tr:.2f}x < "
-                    f"{min_fused_tpot_ratio}x (fused route regressed at "
-                    f"max_len={long.get('max_len')})"
+                    f"[{mode}] long-decode gather/fused TPOT ({which}) "
+                    f"{tr:.2f}x < {min_fused_tpot_ratio}x (fused route "
+                    f"regressed at max_len={long.get('max_len')})"
                 )
             else:
-                print(f"[{mode}] long-decode gather/fused TPOT {tr:.2f}x >= "
-                      f"{min_fused_tpot_ratio}x (max_len={long.get('max_len')})")
+                print(f"[{mode}] long-decode gather/fused TPOT ({which}) "
+                      f"{tr:.2f}x >= {min_fused_tpot_ratio}x "
+                      f"(max_len={long.get('max_len')})")
         if long and min_fused_hbm_ratio > 0:
             hr = long.get("hbm_ratio_gather_over_fused")
             if hr is None:

@@ -58,11 +58,16 @@ import numpy as np
 from repro.configs import get_smoke
 from repro.models import build_model
 from repro.nn.module import unbox
+from repro.obs import MetricsRegistry
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.metrics import _percentile
 from repro.serve.scheduler import replay_arrivals
 
 MODES = ("dense", "bika", "bnn", "qnn8")
+
+# bump when row keys / semantics change (v2: tap tpot percentiles, per-row
+# metrics-registry snapshots, top-level schema_version stamp)
+SCHEMA_VERSION = 2
 
 
 def make_workload(rng: np.random.RandomState, n: int, vocab: int, *,
@@ -133,6 +138,8 @@ class _Tap:
             "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
             "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,
             "tpot_mean_s": float(np.mean(tpots)) if tpots else None,
+            "tpot_p50_s": _percentile(tpots, 0.50) if tpots else None,
+            "tpot_p95_s": _percentile(tpots, 0.95) if tpots else None,
         }
 
 
@@ -176,9 +183,12 @@ def run_static(api, params, arch, workload, *, batch_size: int, max_len: int,
 def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
                    warmup: bool, mesh=None, engine: str = "continuous",
                    block_size: int = 8, chunk: int = 16) -> Dict:
+    # per-row registry: the run's labelled histograms/counters + serve_run_*
+    # gauges ride along in the row as a JSON snapshot (schema_version 2)
+    registry = MetricsRegistry()
     eng = ServeEngine(api, params, arch, max_len=max_len, engine=engine,
                       n_slots=n_slots, kv_block_size=block_size,
-                      prefill_chunk=chunk, mesh=mesh)
+                      prefill_chunk=chunk, mesh=mesh, registry=registry)
     sched = eng.scheduler
     if warmup:
         _warmup(eng, arch.vocab)
@@ -208,6 +218,14 @@ def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
         out["kv_bytes_per_token"] = sched.metrics.kv_bytes_per_token
         out["kv_bytes_in_use_peak"] = sched.metrics.kv_bytes_in_use_peak
         out["decode_hbm_bytes_per_token"] = sched.metrics.decode_hbm_bytes_per_token
+    # scheduler-clock latency aggregates + registry state for this row
+    # (tap figures above stay the cross-engine comparison source of truth)
+    sm = sched.metrics.summary()
+    out["sched_tpot_p50_s"] = sm["tpot_p50_s"]
+    out["sched_tpot_p95_s"] = sm["tpot_p95_s"]
+    out["sched_queue_wait_mean_s"] = sm["queue_wait_mean_s"]
+    out["sched_prefill_mean_s"] = sm["prefill_mean_s"]
+    out["registry"] = registry.snapshot()
     return out
 
 
@@ -241,6 +259,9 @@ def run_long_decode(mode: str, args) -> Dict:
             block_size=args.kv_block_size, chunk=args.prefill_chunk)
     f, g = out["fused"]["tpot_mean_s"], out["gather"]["tpot_mean_s"]
     out["tpot_ratio_gather_over_fused"] = (g / f) if f else None
+    f50, g50 = out["fused"]["tpot_p50_s"], out["gather"]["tpot_p50_s"]
+    # median-based ratio: one straggler tick can't skew the route A/B
+    out["tpot_p50_ratio_gather_over_fused"] = (g50 / f50) if f50 else None
     out["hbm_ratio_gather_over_fused"] = (
         out["gather"]["decode_hbm_bytes_per_token"]
         / out["fused"]["decode_hbm_bytes_per_token"]
@@ -443,6 +464,7 @@ def main(argv=None) -> int:
                         results[m]["continuous_paged_tp2"] = row["continuous_paged"]
     payload = {
         "bench": "serving",
+        "schema_version": SCHEMA_VERSION,
         "arch": args.arch,
         "workload": {
             "requests": args.requests,

@@ -300,6 +300,7 @@ def measured_blocks(
 
     best, best_t = None, float("inf")
     seen = set()
+    timings = []  # (blocks, mean_s) per legal candidate, for the trace event
     for cand in candidates or _CANDIDATES:
         cl = _clamp(m, k, n, {**DEFAULT_BLOCKS, **cand})
         key = tuple(sorted(cl.items()))
@@ -316,12 +317,32 @@ def measured_blocks(
             t = (time.perf_counter() - t0) / iters
         except Exception:
             continue  # illegal tiling for this backend: skip candidate
+        timings.append((cl, t))
         if t < best_t:
             best, best_t = cl, t
     if best is None:
         best = _clamp(m, k, n, heuristic_blocks(m, k, n, path))
     _store_cache(_cache_key(path, m, k, n), best)
+    _trace_search(f"{path}:{m}x{k}x{n}", best, best_t, timings)
     return best
+
+
+def _trace_search(shape_key: str, winner: Dict[str, int], best_t: float,
+                  timings) -> None:
+    """Report one measured search to the process-global tracer (installed by
+    ``launch.serve --trace-out`` via ``obs.trace.set_tracer``) as an
+    ``autotune`` event on the ``autotune`` track, with per-candidate means."""
+    from repro.obs.trace import get_tracer
+
+    tracer = get_tracer()
+    if not tracer.enabled:
+        return
+    tracer.event(
+        "autotune", track="autotune", shape=shape_key, winner=dict(winner),
+        best_ms=(best_t * 1e3 if best_t != float("inf") else None),
+        n_candidates=len(timings),
+        candidates=[{"blocks": dict(bl), "ms": t * 1e3} for bl, t in timings],
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -434,6 +455,7 @@ def measured_paged_blocks(
     if candidates is None:
         candidates = [bh for bh in range(1, kv_heads + 1) if kv_heads % bh == 0]
     best, best_t = None, float("inf")
+    timings = []
     for bh in candidates:
         cl = _clamp_paged(kv_heads, {"block_h": bh})
         fn = lambda: ops.paged_attention(q, k, v, tables, q_pos,
@@ -447,9 +469,13 @@ def measured_paged_blocks(
             dt = (time.perf_counter() - t0) / iters
         except Exception:
             continue
+        timings.append((cl, dt))
         if dt < best_t:
             best, best_t = cl, dt
     if best is None:
         best = heuristic_paged_blocks(n_slots, max_len, block_size, hd, kv_heads)
     _store_cache(paged_attn_cache_key(n_slots, max_len, block_size, hd, kv_heads), best)
+    _trace_search(
+        f"{PAGED_ATTN_PATH}:{n_slots}x{max_len}x{block_size}x{hd}x{kv_heads}",
+        best, best_t, timings)
     return best

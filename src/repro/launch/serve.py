@@ -9,6 +9,17 @@ process instead of submitting everything up front: the launcher ticks the
 slot scheduler and admits each request when its arrival time elapses —
 the same open-loop load shape as benchmarks/serving_bench.py.
 
+Observability (DESIGN.md §8, all opt-in):
+
+- ``--trace-out trace.jsonl`` records the run's request-lifecycle spans and
+  paged-path events to JSONL (plus ``trace.perfetto.json`` next to it,
+  loadable at ui.perfetto.dev); validate/report with
+  ``benchmarks/trace_report.py``.
+- ``--metrics-out metrics.prom`` dumps the metrics registry in Prometheus
+  text format (``.json`` suffix -> JSON snapshot).
+- ``--profile-sample N`` phase-times every Nth scheduler tick;
+  ``--profile-dir DIR`` wraps the drain in ``jax.profiler.trace``.
+
 ``--tp N`` serves tensor-parallel on a (n_devices/N, N) data x model mesh
 built from the local devices (``--mesh-shape d,m`` pins an explicit shape):
 params go out under ``param_shardings``, the KV pool shards kv_heads over
@@ -26,6 +37,7 @@ import numpy as np
 from repro.configs import ARCH_NAMES, get_config, get_smoke
 from repro.models import build_model
 from repro.nn.module import param_bytes, unbox
+from repro.obs import MetricsRegistry, Tracer, profile_trace, set_tracer
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.scheduler import replay_arrivals
 
@@ -84,8 +96,25 @@ def main(argv=None) -> int:
                          "data x model mesh (0 = single device)")
     ap.add_argument("--mesh-shape", default="",
                     help="explicit 'data,model' mesh shape (overrides --tp)")
+    ap.add_argument("--trace-out", default="",
+                    help="write request-lifecycle trace JSONL here (also "
+                         "writes <stem>.perfetto.json for ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=65536,
+                    help="trace ring-buffer capacity in records")
+    ap.add_argument("--metrics-out", default="",
+                    help="dump the metrics registry: Prometheus text, or a "
+                         "JSON snapshot when the path ends in .json")
+    ap.add_argument("--profile-dir", default="",
+                    help="wrap the drain in jax.profiler.trace writing here")
+    ap.add_argument("--profile-sample", type=int, default=0,
+                    help="phase-time every Nth scheduler tick (0 = off)")
     args = ap.parse_args(argv)
     mesh = build_serve_mesh(args.tp, args.mesh_shape)
+
+    tracer = Tracer(capacity=args.trace_capacity) if args.trace_out else None
+    if tracer is not None:
+        set_tracer(tracer)  # autotune + other global-hook sites report here
+    registry = MetricsRegistry() if (args.metrics_out or args.trace_out) else None
 
     getter = get_smoke if args.smoke else get_config
     arch = getter(args.arch, compute_mode=args.mode, remat=False)
@@ -103,7 +132,9 @@ def main(argv=None) -> int:
                       kv_block_size=args.kv_block_size,
                       kv_n_blocks=args.kv_n_blocks or None,
                       prefix_cache=args.prefix_cache,
-                      prefill_chunk=args.prefill_chunk, mesh=mesh)
+                      prefill_chunk=args.prefill_chunk, mesh=mesh,
+                      tracer=tracer, registry=registry,
+                      profile_sample=args.profile_sample)
     mesh_note = (f" mesh={dict(mesh.shape)}" if mesh is not None else "")
     print(f"[serve] engine={eng.engine}{mesh_note}")
     rng = np.random.RandomState(0)
@@ -123,13 +154,14 @@ def main(argv=None) -> int:
     if args.arrival_rate > 0 and eng.scheduler is None:
         print("[serve] WARNING: --arrival-rate needs a slot-scheduler engine "
               f"(continuous/paged); engine={eng.engine} drains closed-loop instead")
-    if args.arrival_rate > 0 and eng.scheduler is not None:
-        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
-        done, _ = replay_arrivals(eng.scheduler, list(zip(arrivals, reqs)))
-    else:
-        for r in reqs:
-            eng.submit(r)
-        done = eng.run(extra_batch=extra)
+    with profile_trace(args.profile_dir):
+        if args.arrival_rate > 0 and eng.scheduler is not None:
+            arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate, len(reqs)))
+            done, _ = replay_arrivals(eng.scheduler, list(zip(arrivals, reqs)))
+        else:
+            for r in reqs:
+                eng.submit(r)
+            done = eng.run(extra_batch=extra)
     for r in sorted(done, key=lambda q: q.rid)[:4]:
         print(f"  req {r.rid}: {list(r.output)[:10]}...")
     print(f"[serve] completed {len(done)} requests")
@@ -147,6 +179,29 @@ def main(argv=None) -> int:
               f"({m['kv_bytes_per_token']:.0f} B/token) "
               f"in-use peak={m['kv_bytes_in_use_peak']:,} B "
               f"decode HBM/token={m['decode_hbm_bytes_per_token']:.0f} B")
+    if eng.profiler is not None and eng.profiler.sampled_ticks:
+        ps = eng.profiler.summary()
+        split = " ".join(f"{k}={v['fraction']:.0%}"
+                         for k, v in ps["phases"].items())
+        print(f"[serve] profile: {ps['sampled_ticks']}/{ps['ticks']} ticks "
+              f"sampled; {split}")
+    if tracer is not None:
+        summary = (eng.metrics.summary() if eng.metrics is not None else None)
+        requests = ([r.metrics.to_dict() for r in done
+                     if r.metrics is not None] or None)
+        tracer.write_jsonl(args.trace_out, summary=summary, requests=requests)
+        stem = args.trace_out[:-6] if args.trace_out.endswith(".jsonl") \
+            else args.trace_out
+        tracer.write_perfetto(stem + ".perfetto.json")
+        print(f"[serve] trace: {len(tracer)} records "
+              f"({tracer.dropped} dropped) -> {args.trace_out}")
+        set_tracer(None)
+    if registry is not None and args.metrics_out:
+        if args.metrics_out.endswith(".json"):
+            registry.write_json(args.metrics_out)
+        else:
+            registry.write_prometheus(args.metrics_out)
+        print(f"[serve] metrics -> {args.metrics_out}")
     return 0
 
 

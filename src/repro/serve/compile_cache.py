@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 __all__ = ["BucketedPrefill", "ChunkedPrefill", "bucket_for"]
 
 
@@ -58,12 +60,13 @@ class BucketedPrefill:
 
     def __init__(self, api, *, max_len: int, quantized: bool = False,
                  min_bucket: int = 16, mesh=None, rules=None,
-                 param_sh=None):
+                 param_sh=None, tracer=None):
         self.api = api
         self.max_len = max_len
         self.quantized = quantized
         self.min_bucket = min_bucket
         self.mesh = mesh
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self._fns: Dict[Tuple[int, int], Callable] = {}
         self.hits = 0
         self.misses = 0
@@ -142,10 +145,17 @@ class BucketedPrefill:
         bucket = self.bucket_for(plen)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :plen] = prompt  # right-pad: exact under causal attention
+        misses0 = self.misses
+        t0 = self.tracer.clock() if self.tracer.enabled else 0.0
         with self._mesh_ctx():
             logits, cache = self.fn(bucket, 1)(
                 params, jnp.asarray(toks), jnp.asarray([plen - 1], jnp.int32)
             )
+        if self.tracer.enabled and self.misses > misses0:
+            # jit compiles lazily on the first call, so this first-call span
+            # is trace + compile + run for the new (bucket, 1) shape
+            self.tracer.add_span("compile", "scheduler", t0, self.tracer.clock(),
+                                 kind="prefill_bucket", bucket=bucket, batch=1)
         return logits, cache
 
 
@@ -172,13 +182,14 @@ class ChunkedPrefill:
     """
 
     def __init__(self, api, *, chunk: int, max_len: int, mesh=None, rules=None,
-                 param_sh=None, cache_sh=None):
+                 param_sh=None, cache_sh=None, tracer=None):
         if chunk < 1:
             raise ValueError(f"chunk must be >= 1, got {chunk}")
         self.api = api
         self.chunk = chunk
         self.max_len = max_len
         self.mesh = mesh
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.hits = 0
         self.misses = 0
         self._fn: Optional[Callable] = None
@@ -216,13 +227,19 @@ class ChunkedPrefill:
         return self._fn
 
     def __call__(self, params, cache, table_row: np.ndarray, prompt: np.ndarray,
-                 cached_len: int = 0):
+                 cached_len: int = 0, *, trace_track: Optional[str] = None,
+                 rid: Optional[int] = None):
         """Append ``prompt[cached_len:]`` to the pool chunk by chunk.
 
         Returns ``(last_logits (1,1,V), cache, n_chunks)`` where
         ``last_logits`` are the logits after the prompt's final token —
         bit-identical to the bucketed whole-prompt prefill the dense
         continuous engine admits with (tests/test_paged_kv.py).
+
+        With ``trace_track`` (the admitting slot's track) each chunk call
+        becomes a ``prefill_chunk`` span nested inside the scheduler's
+        ``prefill`` span; the one-ever program build additionally emits a
+        ``compile`` span on the scheduler track.
         """
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         plen = len(prompt)
@@ -231,6 +248,8 @@ class ChunkedPrefill:
         if not 0 <= cached_len <= plen - 1:
             raise ValueError(f"cached_len {cached_len} outside [0, {plen - 1}]")
         table = jnp.asarray(table_row, jnp.int32).reshape(1, -1)
+        tracer = self.tracer
+        trace = tracer.enabled and trace_track is not None
         logits = None
         n_chunks = 0
         start = cached_len
@@ -239,11 +258,20 @@ class ChunkedPrefill:
             toks = np.zeros((1, self.chunk), np.int32)
             toks[0, : end - start] = prompt[start:end]
             last = (plen - 1 - start) if end == plen else (self.chunk - 1)
+            misses0 = self.misses
+            t0 = tracer.clock() if trace else 0.0
             with self._mesh_ctx():
                 logits, cache = self.fn()(
                     params, cache, jnp.asarray(toks), table,
                     jnp.asarray([start], jnp.int32), jnp.asarray([last], jnp.int32),
                 )
+            if trace:
+                t1 = tracer.clock()
+                tracer.add_span("prefill_chunk", trace_track, t0, t1,
+                                rid=rid, chunk=n_chunks, start=start, end=end)
+                if self.misses > misses0:
+                    tracer.add_span("compile", "scheduler", t0, t1,
+                                    kind="prefill_chunk", chunk_size=self.chunk)
             n_chunks += 1
             start = end
         return logits, cache, n_chunks

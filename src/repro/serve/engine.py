@@ -91,6 +91,9 @@ class ServeEngine:
         prefill_chunk: int = 32,
         mesh=None,
         rules=None,
+        tracer=None,
+        registry=None,
+        profile_sample: int = 0,
     ):
         self.api = api
         self.arch = arch
@@ -104,6 +107,17 @@ class ServeEngine:
         if engine == "auto":
             engine = "continuous" if scheduler_supports(arch) else "static"
         self.engine = engine
+        self.tracer = tracer
+        self.registry = registry
+        # opt-in sampled step timer: every Nth decode tick is phase-timed
+        # with a device sync (0 = off -> allocation-free NullStepTimer)
+        profiler = None
+        if profile_sample and profile_sample > 0:
+            from repro.obs.profile import StepTimer
+
+            profiler = StepTimer(profile_sample, tracer=tracer)
+        self.profiler = profiler
+        obs_kw = dict(tracer=tracer, registry=registry, profiler=profiler)
         self.scheduler: Optional[SlotScheduler] = None
         if engine == "paged":
             self.scheduler = PagedSlotScheduler(
@@ -117,6 +131,7 @@ class ServeEngine:
                 chunk=prefill_chunk,
                 mesh=mesh,
                 rules=rules,
+                **obs_kw,
             )
             params = self.scheduler.params  # already mesh-placed
         elif engine == "continuous":
@@ -128,6 +143,7 @@ class ServeEngine:
                 min_bucket=min_bucket,
                 mesh=mesh,
                 rules=rules,
+                **obs_kw,
             )
             params = self.scheduler.params  # already mesh-placed
         prefill = lambda p, batch: api.prefill(p, batch, max_len=max_len,

@@ -15,6 +15,16 @@ Definitions (DESIGN.md §4):
 - **Slot occupancy** — mean fraction of decode-batch rows doing useful work
   per step. A static engine padded to its slowest request drifts toward 1/B;
   a slot scheduler stays near 1 under load.
+- **Queue wait** — ``t_admit - t_submit``, where ``t_admit`` is stamped the
+  moment a slot is claimed (BEFORE the prefill runs), so queue wait is pure
+  scheduling delay and **prefill** (``t_first_token - t_admit``) is the
+  admission prefill itself. TTFT == queue_wait + prefill exactly (same clock
+  stamps), which is what lets trace spans reconcile with these aggregates.
+
+``bind_registry`` attaches an ``obs.registry.MetricsRegistry``: per-request
+latencies feed labelled histograms/counters as requests finish, and
+``publish`` writes the end-of-window summary as ``serve_run_*`` gauges —
+``RunMetrics`` stays the API, the registry becomes the shared read point.
 """
 from __future__ import annotations
 
@@ -30,7 +40,7 @@ class RequestMetrics:
     rid: int
     prompt_len: int = 0
     t_submit: Optional[float] = None
-    t_admit: Optional[float] = None  # prefill-into-slot time (continuous only)
+    t_admit: Optional[float] = None  # slot claimed; prefill starts (continuous)
     t_first_token: Optional[float] = None
     t_done: Optional[float] = None
     n_tokens: int = 0
@@ -47,6 +57,20 @@ class RequestMetrics:
             return None
         return (self.t_done - self.t_first_token) / (self.n_tokens - 1)
 
+    @property
+    def queue_wait(self) -> Optional[float]:
+        """Scheduling delay: submit -> slot claimed."""
+        if self.t_submit is None or self.t_admit is None:
+            return None
+        return self.t_admit - self.t_submit
+
+    @property
+    def prefill_latency(self) -> Optional[float]:
+        """Admission prefill: slot claimed -> first token."""
+        if self.t_admit is None or self.t_first_token is None:
+            return None
+        return self.t_first_token - self.t_admit
+
     def to_dict(self) -> Dict:
         return {
             "rid": self.rid,
@@ -54,6 +78,8 @@ class RequestMetrics:
             "n_tokens": self.n_tokens,
             "ttft_s": self.ttft,
             "tpot_s": self.tpot,
+            "queue_wait_s": self.queue_wait,
+            "prefill_s": self.prefill_latency,
         }
 
 
@@ -103,6 +129,45 @@ class RunMetrics:
     kv_bytes_in_use_peak: int = 0  # high-water mark of referenced pool bytes
     decode_kv_bytes_read: int = 0  # modeled KV bytes moved by decode steps
     decode_rows: int = 0  # active decode rows summed over steps
+    # optional obs.registry.MetricsRegistry feed (see bind_registry)
+    _registry: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _labels: Dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def bind_registry(self, registry, **labels) -> "RunMetrics":
+        """Attach a MetricsRegistry: finished requests feed labelled
+        histograms/counters live; ``publish`` writes summary gauges. Labels
+        (mode/engine/route) are fixed per scheduler instance."""
+        self._registry = registry
+        self._labels = labels
+        ln = sorted(labels)
+        self._c_requests = registry.counter(
+            "serve_requests_total", "completed requests", ln)
+        self._c_tokens = registry.counter(
+            "serve_tokens_total", "completed output tokens", ln)
+        self._h_ttft = registry.histogram(
+            "serve_ttft_seconds", "time to first token", ln)
+        self._h_tpot = registry.histogram(
+            "serve_tpot_seconds", "steady-state time per output token", ln)
+        self._h_queue = registry.histogram(
+            "serve_queue_wait_seconds", "submit -> slot-claimed delay", ln)
+        self._h_prefill = registry.histogram(
+            "serve_prefill_seconds", "slot-claimed -> first-token prefill", ln)
+        return self
+
+    def publish(self) -> None:
+        """Write this window's summary scalars as ``serve_run_<key>`` gauges
+        (last window wins — Prometheus gauge semantics). No-op unbound."""
+        if self._registry is None:
+            return
+        ln = sorted(self._labels)
+        for key, val in self.summary().items():
+            if isinstance(val, bool) or not isinstance(val, (int, float)):
+                continue
+            self._registry.gauge(
+                f"serve_run_{key}", f"RunMetrics.summary()['{key}']", ln
+            ).set(float(val), **self._labels)
 
     def record_step(self, n_active: int, kv_bytes_read: int = 0) -> None:
         self.decode_steps += 1
@@ -133,6 +198,15 @@ class RunMetrics:
         self.completed_requests += 1
         self.completed_tokens += rm.n_tokens
         self.requests.append(rm)
+        if self._registry is not None:
+            lb = self._labels
+            self._c_requests.inc(1, **lb)
+            self._c_tokens.inc(rm.n_tokens, **lb)
+            for hist, val in ((self._h_ttft, rm.ttft), (self._h_tpot, rm.tpot),
+                              (self._h_queue, rm.queue_wait),
+                              (self._h_prefill, rm.prefill_latency)):
+                if val is not None:
+                    hist.observe(val, **lb)
 
     @property
     def wall_s(self) -> float:
@@ -148,10 +222,14 @@ class RunMetrics:
     def slot_occupancy(self) -> float:
         return self._occupancy_sum / self.decode_steps if self.decode_steps else 0.0
 
-    def summary(self) -> Dict:
+    def summary(self, include_requests: bool = False) -> Dict:
         ttfts = sorted(r.ttft for r in self.requests if r.ttft is not None)
         tpots = sorted(r.tpot for r in self.requests if r.tpot is not None)
-        return {
+        qwaits = sorted(r.queue_wait for r in self.requests
+                        if r.queue_wait is not None)
+        prefills = sorted(r.prefill_latency for r in self.requests
+                          if r.prefill_latency is not None)
+        out = {
             "n_slots": self.n_slots,
             "completed_requests": self.completed_requests,
             "completed_tokens": self.completed_tokens,
@@ -176,4 +254,15 @@ class RunMetrics:
             "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
             "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,
             "tpot_mean_s": sum(tpots) / len(tpots) if tpots else None,
+            # the CI gate's TPOT backstop reads p50 first: a single straggler
+            # request cannot skew the median the way it skews the mean
+            "tpot_p50_s": _percentile(tpots, 0.50) if tpots else None,
+            "tpot_p95_s": _percentile(tpots, 0.95) if tpots else None,
+            "queue_wait_mean_s": sum(qwaits) / len(qwaits) if qwaits else None,
+            "queue_wait_p95_s": _percentile(qwaits, 0.95) if qwaits else None,
+            "prefill_mean_s": sum(prefills) / len(prefills) if prefills else None,
+            "prefill_p95_s": _percentile(prefills, 0.95) if prefills else None,
         }
+        if include_requests:
+            out["requests"] = [r.to_dict() for r in self.requests]
+        return out

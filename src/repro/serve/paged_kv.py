@@ -56,6 +56,7 @@ import jax
 import numpy as np
 
 from repro.models.base import PagedKVLayout, paged_kv_layout
+from repro.obs.trace import NULL_TRACER
 
 __all__ = ["PagedKVManager", "hash_prompt_blocks"]
 
@@ -100,6 +101,7 @@ class PagedKVManager:
         quantized: bool = False,
         mesh=None,
         rules=None,
+        tracer=None,
     ):
         if max_len % block_size:
             raise ValueError(f"max_len {max_len} must be a multiple of block_size {block_size}")
@@ -115,6 +117,7 @@ class PagedKVManager:
             )
         self.prefix_cache = prefix_cache
         self.quantized = quantized
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.mesh = mesh
         # +1 physical row: the reserved parking block for inactive decode rows
         self.parking_block = self.n_blocks
@@ -262,6 +265,9 @@ class PagedKVManager:
             b, _ = self._lru.popitem(last=False)  # oldest
             self._unregister(b)
             self.evictions += 1
+            if self.tracer.enabled:
+                self.tracer.event("prefix_eviction", block=b,
+                                  blocks_cached=len(self._lru))
         self._ref[b] = 1
         return b
 
@@ -359,6 +365,9 @@ class PagedKVManager:
             self._slot_blocks[slot][index] = nb
             self.tables[slot, index] = nb
             self.cow_copies += 1
+            if self.tracer.enabled:
+                self.tracer.event("cow_copy", slot=slot, index=index,
+                                  src_block=b, dst_block=nb)
             return nb
         if b in self._block_hash:
             self._unregister(b)

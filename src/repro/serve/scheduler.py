@@ -46,6 +46,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.base import ArchConfig, ModelAPI
+from repro.obs.profile import NULL_TIMER, StepTimer
+from repro.obs.trace import Tracer, get_tracer
 from repro.serve.compile_cache import BucketedPrefill, ChunkedPrefill
 from repro.serve.kv import KVSlotManager
 from repro.serve.metrics import RequestMetrics, RunMetrics
@@ -87,6 +89,8 @@ class _SlotState:
 
 
 class SlotScheduler:
+    engine_name = "continuous"  # registry/trace label (paged overrides)
+
     def __init__(
         self,
         api: ModelAPI,
@@ -98,6 +102,9 @@ class SlotScheduler:
         quantized_kv: bool = False,
         min_bucket: int = 16,
         clock: Callable[[], float] = time.monotonic,
+        tracer: Optional[Tracer] = None,
+        registry=None,
+        profiler: Optional[StepTimer] = None,
         mesh=None,
         rules=None,
     ):
@@ -112,6 +119,13 @@ class SlotScheduler:
         self.n_slots = n_slots
         self.max_len = max_len
         self.clock = clock
+        # observability: explicit tracer wins, else the process-global hook
+        # (NULL_TRACER unless launch --trace-out installed one); registry and
+        # profiler stay None/NULL when the caller didn't opt in
+        self.tracer = tracer if tracer is not None else get_tracer()
+        self.registry = registry
+        self.profiler = profiler if profiler is not None else NULL_TIMER
+        self._tick_compiled = False  # first _run_tick compiles the step
         self.mesh = mesh
         if mesh is not None:
             from repro.distributed.sharding import (
@@ -129,6 +143,7 @@ class SlotScheduler:
         self.params = params
         self._init_kv_prefill(api, quantized_kv, min_bucket)
         self.metrics = RunMetrics(n_slots=n_slots)
+        self._bind_metrics()
         self._stamp_kv_gauges()
         # prefill-compile counter at the start of the current metrics window:
         # BucketedPrefill.misses is cumulative across the scheduler's life,
@@ -145,6 +160,14 @@ class SlotScheduler:
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
 
+    def _metric_labels(self) -> dict:
+        return dict(mode=self.arch.compute_mode, engine=self.engine_name,
+                    route=self.arch.paged_attn_route)
+
+    def _bind_metrics(self) -> None:
+        if self.registry is not None:
+            self.metrics.bind_registry(self.registry, **self._metric_labels())
+
     # -- dense-vs-paged hooks (PagedSlotScheduler overrides these) ----------
 
     def _init_kv_prefill(self, api, quantized_kv: bool, min_bucket: int) -> None:
@@ -153,6 +176,7 @@ class SlotScheduler:
         self.prefill = BucketedPrefill(
             api, max_len=self.max_len, quantized=quantized_kv, min_bucket=min_bucket,
             mesh=self.mesh, rules=self.rules, param_sh=self._param_sh,
+            tracer=self.tracer,
         )
 
     @property
@@ -221,8 +245,11 @@ class SlotScheduler:
         """Start a fresh RunMetrics window (aggregates are otherwise
         cumulative across run() calls — e.g. warmup + timed run). Snapshots
         the prefill-compile counter so the new window reports only compiles
-        it actually triggered."""
+        it actually triggered. A bound registry carries over: its counters
+        keep accumulating (Prometheus semantics), only the summary gauges
+        restart with the window."""
         self.metrics = RunMetrics(n_slots=self.n_slots)
+        self._bind_metrics()
         self._prefill_miss_base = self.prefill.misses
         self._stamp_kv_gauges()
 
@@ -242,16 +269,31 @@ class SlotScheduler:
                 f"leaves no room to generate"
             )
         req.metrics = RequestMetrics(rid=req.rid, prompt_len=plen, t_submit=self.clock())
+        if self.tracer.enabled:
+            self.tracer.event("submit", track="scheduler", rid=req.rid,
+                              prompt_len=plen)
         self.queue.append(req)
 
     # -- lifecycle ----------------------------------------------------------
 
-    def _finish(self, req: Request, st: _SlotState) -> None:
+    def _finish(self, req: Request, st: _SlotState, slot: int) -> None:
         req.output = np.asarray(st.emitted, np.int32)
-        req.metrics.t_done = self.clock()
-        req.metrics.n_tokens = len(st.emitted)
-        self.metrics.finish_request(req.metrics)
+        rm = req.metrics
+        rm.t_done = self.clock()
+        rm.n_tokens = len(st.emitted)
+        self.metrics.finish_request(rm)
         self.completed.append(req)
+        if self.tracer.enabled:
+            # decode span: first token -> done, on the slot's track. Its
+            # duration / (n_tokens - 1) IS this request's TPOT (same stamps).
+            self.tracer.add_span(
+                "decode", f"slot{slot}", rm.t_first_token, rm.t_done,
+                rid=req.rid, n_tokens=rm.n_tokens, tpot_s=rm.tpot)
+            # whole-lifecycle async span (requests overlap freely)
+            self.tracer.add_span(
+                "request", "requests", rm.t_submit, rm.t_done,
+                async_id=req.rid, rid=req.rid, prompt_len=rm.prompt_len,
+                n_tokens=rm.n_tokens, ttft_s=rm.ttft)
 
     def _emit(self, st: _SlotState, token: int) -> bool:
         """Record one generated token; returns True when the request is done."""
@@ -266,19 +308,25 @@ class SlotScheduler:
 
     def _admit_one(self, req: Request) -> bool:
         """Admit one request into a free slot. Returns False when admission
-        must defer (paged block backpressure); the dense pool always admits."""
+        must defer (paged block backpressure); the dense pool always admits.
+        ``t_admit`` is stamped when the slot is claimed — BEFORE the prefill
+        — so queue_wait is pure scheduling delay and prefill_s is the
+        admission prefill (metrics.py)."""
         slot = self.kv.alloc()
         assert slot is not None
+        rm = req.metrics
+        rm.t_admit = self.clock()
         logits, pcache = self.prefill(self.params, req.prompt)
         self.metrics.prefills += 1
-        req.metrics.t_admit = self.clock()
         t0 = int(np.argmax(np.asarray(logits)[0, -1]))
-        plen = req.metrics.prompt_len
+        plen = rm.prompt_len
         # decode writes go to plen .. plen+n-2; keep them inside the cache
         budget = min(req.max_new_tokens, self.max_len - plen + 1)
         st = _SlotState(req=req, remaining=budget, emitted=[])
-        if self._emit(st, t0):
-            self._finish(req, st)
+        done = self._emit(st, t0)
+        self._trace_admission(req, slot, bucket=self.prefill.bucket_for(plen))
+        if done:
+            self._finish(req, st, slot)
             self.kv.free(slot)
             return True
         self.kv.write_prefill(slot, pcache)
@@ -286,6 +334,18 @@ class SlotScheduler:
         self._tok[slot] = t0
         self._pos[slot] = plen
         return True
+
+    def _trace_admission(self, req: Request, slot: int, **extra) -> None:
+        """Queued + prefill spans from the request's own clock stamps:
+        queued.dur + prefill.dur == TTFT exactly (same floats)."""
+        if not self.tracer.enabled:
+            return
+        rm = req.metrics
+        self.tracer.add_span("queued", "requests", rm.t_submit, rm.t_admit,
+                             async_id=req.rid, rid=req.rid)
+        self.tracer.add_span("prefill", f"slot{slot}", rm.t_admit,
+                             rm.t_first_token, rid=req.rid,
+                             prompt_len=rm.prompt_len, **extra)
 
     def _admit(self) -> None:
         """FIFO admission: the queue head either admits or (paged) defers —
@@ -298,26 +358,41 @@ class SlotScheduler:
 
     def tick(self) -> bool:
         """Admit waiting requests, then run one decode step over the slot
-        batch. Returns False when there was nothing to do."""
-        self._admit()
+        batch. Returns False when there was nothing to do. The optional
+        StepTimer samples every Nth tick, splitting wall time into admit
+        (queue + prefill) / decode (device step, synced in-phase) / host
+        (emit + EOS bookkeeping) phases."""
+        prof = self.profiler
+        prof.tick()
+        with prof.phase("admit"):
+            self._admit()
         active = [i for i, s in enumerate(self._slots) if s is not None]
         if not active:
             return False
-        nxt = self._run_tick()
-        self.metrics.record_step(len(active), kv_bytes_read=self._decode_kv_bytes(active))
-        for i in active:
-            st = self._slots[i]
-            self._tok[i] = nxt[i]
-            self._pos[i] += 1
-            if self._emit(st, int(nxt[i])):
-                self._finish(st.req, st)
-                self._slots[i] = None
-                self._release_slot(i)
-                # park the freed row at a safe in-bounds position; its junk
-                # writes are overwritten by the next admission's prefill (or
-                # land in the paged pool's parking block)
-                self._tok[i] = 0
-                self._pos[i] = 0
+        with prof.phase("decode"):
+            if not self._tick_compiled and self.tracer.enabled:
+                with self.tracer.span("compile", "scheduler", kind="decode_tick",
+                                      n_slots=self.n_slots):
+                    nxt = prof.sync(self._run_tick())
+            else:
+                nxt = prof.sync(self._run_tick())
+            self._tick_compiled = True
+        with prof.phase("host"):
+            self.metrics.record_step(
+                len(active), kv_bytes_read=self._decode_kv_bytes(active))
+            for i in active:
+                st = self._slots[i]
+                self._tok[i] = nxt[i]
+                self._pos[i] += 1
+                if self._emit(st, int(nxt[i])):
+                    self._finish(st.req, st, i)
+                    self._slots[i] = None
+                    self._release_slot(i)
+                    # park the freed row at a safe in-bounds position; its
+                    # junk writes are overwritten by the next admission's
+                    # prefill (or land in the paged pool's parking block)
+                    self._tok[i] = 0
+                    self._pos[i] = 0
         return True
 
     def run(self) -> List[Request]:
@@ -329,6 +404,7 @@ class SlotScheduler:
             self.tick()
         self.metrics.t_end = self.clock()
         self.metrics.prefill_compiles = self.window_prefill_compiles()
+        self.metrics.publish()
         done, self.completed = self.completed, []
         return done
 
@@ -352,6 +428,8 @@ class PagedSlotScheduler(SlotScheduler):
     The jitted tick gains one operand — the (S, T) block tables — and keeps
     the single-signature guarantee: tables are data, not shape.
     """
+
+    engine_name = "paged"
 
     def __init__(
         self,
@@ -384,11 +462,12 @@ class PagedSlotScheduler(SlotScheduler):
             api, n_slots=self.n_slots, max_len=self.max_len,
             block_size=self.block_size, n_blocks=self._n_blocks_arg,
             prefix_cache=self.prefix_enabled, quantized=quantized_kv,
-            mesh=self.mesh, rules=self.rules,
+            mesh=self.mesh, rules=self.rules, tracer=self.tracer,
         )
         self.prefill = ChunkedPrefill(
             api, chunk=self.chunk, max_len=self.max_len, mesh=self.mesh,
             rules=self.rules, param_sh=self._param_sh, cache_sh=self.kv._cache_sh,
+            tracer=self.tracer,
         )
         # f32 bytes of one row's dequantized k+v window — what the gather
         # route materializes per row when the pool is int8
@@ -467,9 +546,19 @@ class PagedSlotScheduler(SlotScheduler):
         if cached is None:
             self.kv.free_slot(slot)  # owns no blocks yet; just re-parks
             self.metrics.admission_deferrals += 1
+            if self.tracer.enabled:
+                self.tracer.event("admission_deferral", track="scheduler",
+                                  rid=req.rid, prompt_len=plen,
+                                  blocks_free=self.kv.blocks_free)
             return False
+        req.metrics.t_admit = self.clock()
+        if self.tracer.enabled:
+            self.tracer.event("prefix_hit" if cached else "prefix_miss",
+                              track="scheduler", rid=req.rid, prompt_len=plen,
+                              cached_tokens=cached)
         logits, self.kv.cache, n_chunks = self.prefill(
-            self.params, self.kv.cache, self.kv.tables[slot], req.prompt, cached
+            self.params, self.kv.cache, self.kv.tables[slot], req.prompt, cached,
+            trace_track=f"slot{slot}", rid=req.rid,
         )
         self.metrics.prefills += 1
         self.metrics.prefill_chunks += n_chunks
@@ -478,14 +567,15 @@ class PagedSlotScheduler(SlotScheduler):
         self.metrics.prefix_evictions = self.kv.evictions - self._evict_base
         self.metrics.record_blocks(self.kv.blocks_in_use,
                                    bytes_in_use=self.kv.kv_bytes_in_use)
-        req.metrics.t_admit = self.clock()
         # publish this prompt's full blocks before any chance of freeing, so
         # even an instant-EOS request seeds the prefix cache
         self.kv.register_prompt(slot, req.prompt)
         t0 = int(np.argmax(np.asarray(logits)[0, -1]))
         st = _SlotState(req=req, remaining=budget, emitted=[])
-        if self._emit(st, t0):
-            self._finish(req, st)
+        done = self._emit(st, t0)
+        self._trace_admission(req, slot, cached_tokens=cached, n_chunks=n_chunks)
+        if done:
+            self._finish(req, st, slot)
             self.kv.free_slot(slot)
             return True
         self._slots[slot] = st
@@ -529,5 +619,6 @@ def replay_arrivals(
     t_end = clock()
     sched.metrics.t_end = t_end
     sched.metrics.prefill_compiles = sched.window_prefill_compiles()
+    sched.metrics.publish()
     done, sched.completed = sched.completed, []
     return done, t_end - t0
