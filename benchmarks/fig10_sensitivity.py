@@ -30,7 +30,8 @@ def main(quick: bool = True) -> List[str]:
     best = max(grid, key=grid.get)
     os.makedirs("results", exist_ok=True)
     with open("results/fig10_sensitivity.json", "w") as f:
-        json.dump({"grid": grid, "spread": spread, "best": best}, f, indent=1)
+        json.dump({"grid": grid, "spread": spread, "best": best}, f, indent=1,
+              sort_keys=True)
     return [
         f"fig10/spread,0.0,spread={spread:.3f} best={best} "
         f"min={min(vals):.3f} max={max(vals):.3f} (paper: up to 0.17 on MNIST)"

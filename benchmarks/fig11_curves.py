@@ -36,7 +36,7 @@ def main(quick: bool = True) -> List[str]:
     }
     os.makedirs("results", exist_ok=True)
     with open("results/fig11_curves.json", "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(out, f, indent=1, sort_keys=True)
     return [
         f"fig11/divergence,0.0,easy_gap={gap_easy:.3f} hard_gap={gap_hard:.3f} "
         f"signature={'OK' if gap_hard > gap_easy else 'MISSING'} "

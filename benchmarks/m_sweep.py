@@ -39,7 +39,7 @@ def main(quick: bool = True) -> List[str]:
         out[name] = dict(zip(map(str, ms), errs))
     os.makedirs("results", exist_ok=True)
     with open("results/m_sweep.json", "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(out, f, indent=1, sort_keys=True)
     rows = []
     for name, errs in out.items():
         e1, elast = errs[str(ms[0])], errs[str(ms[-1])]

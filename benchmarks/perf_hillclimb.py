@@ -114,7 +114,7 @@ def main():
             else:
                 print(f"[{cell}] {label}: ERROR {r['error'][:200]}", flush=True)
         with open(f"results/perf/{arch}__{shape}.json", "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(rows, f, indent=1, sort_keys=True)
     print("hillclimb done")
 
 

@@ -19,9 +19,14 @@ from typing import Dict, List, Optional
 
 import jax
 
-PEAK_FLOPS = 197e12  # v5e bf16 per chip
-HBM_BW = 819e9  # B/s per chip
-LINK_BW = 50e9  # B/s per ICI link
+from repro.hwsim.resource import DEFAULT_DEVICE, DEVICE_TERMS
+
+# shared device cost terms (repro.hwsim.resource) — the same table the
+# kernel-contract verifier budgets VMEM against, so they cannot drift
+_TERMS = DEVICE_TERMS[DEFAULT_DEVICE]
+PEAK_FLOPS = _TERMS["peak_flops"]  # v5e bf16 per chip
+HBM_BW = _TERMS["hbm_bw"]  # B/s per chip
+LINK_BW = _TERMS["link_bw"]  # B/s per ICI link
 
 _PARAM_CACHE: Dict[str, Dict[str, float]] = {}
 
@@ -75,7 +80,7 @@ def analyze_record(rec: Dict) -> Optional[Dict]:
     if rec.get("status") != "ok":
         return None
     static = rec.get("static")
-    if static:  # trip-count-aware model (launch/hlo_analysis.py)
+    if static:  # trip-count-aware model (analysis/hlo_audit.py)
         flops_dev = static["flops"]
         bytes_dev = static["bytes"]
         coll_dev = static["collectives"]["total"]["wire_bytes"]
@@ -124,7 +129,7 @@ def load_dir(d: str) -> List[Dict]:
         hlo_path = path[: -len(".json")] + ".hlo.txt"
         if rec.get("status") == "ok" and os.path.exists(hlo_path):
             # re-analyze with the *current* static model (no recompile needed)
-            from repro.launch.hlo_analysis import analyze_hlo
+            from repro.analysis.hlo_audit import analyze_hlo
 
             with open(hlo_path) as f:
                 st = analyze_hlo(f.read(), rec.get("n_devices", 1))
@@ -163,7 +168,7 @@ def main(quick: bool = True) -> List[str]:
         with open(f"results/roofline_{mesh_name}.md", "w") as f:
             f.write(markdown_table(rows) + "\n")
         with open(f"results/roofline_{mesh_name}.json", "w") as f:
-            json.dump(rows, f, indent=1)
+            json.dump(rows, f, indent=1, sort_keys=True)
         for r in rows:
             us = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e6
             rows_out.append(

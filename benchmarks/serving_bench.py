@@ -488,7 +488,7 @@ def main(argv=None) -> int:
         "results": results,
     }
     with open(args.out, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(payload, f, indent=2, sort_keys=True)
     print(f"wrote {args.out}")
     return 0
 

@@ -64,7 +64,7 @@ def main(quick: bool = True) -> List[str]:
         )
     os.makedirs("results", exist_ok=True)
     with open("results/table1_kan_cost.json", "w") as f:
-        json.dump(out, f, indent=1)
+        json.dump(out, f, indent=1, sort_keys=True)
     return rows
 
 

@@ -108,7 +108,8 @@ def main(quick: bool = True) -> List[str]:
 
     os.makedirs("results", exist_ok=True)
     with open("results/table2_accuracy.json", "w") as f:
-        json.dump({"accuracy": results, "claims": claims, "steps": steps}, f, indent=1)
+        json.dump({"accuracy": results, "claims": claims, "steps": steps}, f,
+              indent=1, sort_keys=True)
 
     rows = []
     for net_name, accs in results.items():

@@ -53,7 +53,7 @@ def main(quick: bool = True) -> List[str]:
     }
     os.makedirs("results", exist_ok=True)
     with open("results/table3_resources.json", "w") as f:
-        json.dump({"table": table, "claims": claims}, f, indent=1)
+        json.dump({"table": table, "claims": claims}, f, indent=1, sort_keys=True)
 
     for mode in ("bika", "bnn", "qnn"):
         t = table[mode]

@@ -238,7 +238,7 @@ def main(argv=None) -> int:
         if records_to_perfetto is None:
             raise SystemExit("--perfetto-out needs repro.obs on PYTHONPATH")
         with open(args.perfetto_out, "w") as fh:
-            json.dump(records_to_perfetto(data["records"]), fh)
+            json.dump(records_to_perfetto(data["records"]), fh, sort_keys=True)
         print(f"perfetto -> {args.perfetto_out}")
     if args.validate:
         fails = validate(data, tol=args.tol)

@@ -1,0 +1,43 @@
+"""repro.analysis — the three-pass static checker gating CI (DESIGN.md §9).
+
+  lints             AST lint rules (RPA0xx) over src/ and benchmarks/ for
+                    JAX/serving pitfalls: host syncs in jitted/per-tick
+                    code, jit/pallas_call in loops, traced-value branching,
+                    dict-order-dependent cache keys, timing without
+                    block_until_ready. Suppress a deliberate hit with
+                    ``# repro: noqa-RPA001 -- <why>``.
+  kernel_contracts  abstract (no-execution) verification of every
+                    KERNEL_ROUTES entry against the whole config zoo
+                    (KCV0xx): block divisibility, index-map bounds, VMEM
+                    budget vs repro.hwsim terms, dtype rules, autotune
+                    cache-key consistency.
+  hlo_audit         lowers the real serve-path programs and audits the
+                    post-SPMD HLO (HLO0xx): collective budget, int8-KV f32
+                    upcasts, prefill compile counts. Also home of
+                    ``analyze_hlo`` (moved from launch/hlo_analysis.py).
+
+Run it:  ``python -m repro.analysis --all`` (exit 0 iff no findings);
+``--json out.json`` writes the CI artifact. See ``--help`` for examples.
+
+The heavy passes import jax and the model stack, so they are imported
+lazily — ``repro.analysis.lints`` alone is stdlib-only and fast.
+"""
+from . import lints
+from .report import Finding, Report
+
+__all__ = ["Finding", "Report", "lints", "run_all"]
+
+
+def run_all(root: str = ".", *, hlo: bool = True) -> Report:
+    """Run every pass and merge the reports (hlo lowers + compiles real
+    serve programs — slower; gate with ``hlo=False`` for a quick loop)."""
+    from . import kernel_contracts
+
+    rep = Report()
+    rep.extend(lints.run(root))
+    rep.extend(kernel_contracts.run())
+    if hlo:
+        from . import hlo_audit
+
+        rep.extend(hlo_audit.run())
+    return rep

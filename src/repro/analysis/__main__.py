@@ -1,0 +1,81 @@
+"""CLI for the three-pass static checker: ``python -m repro.analysis``.
+
+Exit code 0 iff no findings — this is what the CI ``analysis`` job gates on.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .report import Report
+
+_EPILOG = """\
+examples:
+  # everything (what CI runs); nonzero exit on any finding
+  python -m repro.analysis --all --json analysis.json
+
+  # fast inner loop: AST lints only, on specific files
+  python -m repro.analysis --lints --paths src/repro/serve/scheduler.py
+
+  # kernel contracts for the whole config zoo, with per-route VMEM estimates
+  python -m repro.analysis --contracts --json contracts.json
+
+  # HLO audit only (lowers + compiles the serve programs; slowest pass)
+  python -m repro.analysis --hlo
+
+suppressing a deliberate lint hit (the comment is mandatory by convention):
+  t = time.perf_counter()  # repro: noqa-RPA005 -- wall-clock span, not a kernel timing
+"""
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=(
+            "Three-pass static checker: JAX-pitfall AST lints (RPA0xx), "
+            "Pallas kernel contract verifier (KCV0xx), HLO/collective "
+            "auditor (HLO0xx)."
+        ),
+        epilog=_EPILOG,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+    )
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none selected)")
+    ap.add_argument("--lints", action="store_true", help="AST lint pass")
+    ap.add_argument("--contracts", action="store_true",
+                    help="kernel contract verifier")
+    ap.add_argument("--hlo", action="store_true", help="HLO/collective audit")
+    ap.add_argument("--root", default=".",
+                    help="repo root for the lint pass (default: cwd)")
+    ap.add_argument("--paths", nargs="*", default=None,
+                    help="lint only these files/dirs instead of src/ + benchmarks/")
+    ap.add_argument("--json", dest="json_out", default=None, metavar="FILE",
+                    help="write the merged JSON report (the CI artifact)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the human rendering; exit code only")
+    args = ap.parse_args(argv)
+
+    want_all = args.all or not (args.lints or args.contracts or args.hlo)
+    rep = Report()
+    if want_all or args.lints:
+        from . import lints
+
+        rep.extend(lints.run(args.root, paths=args.paths))
+    if want_all or args.contracts:
+        from . import kernel_contracts
+
+        rep.extend(kernel_contracts.run())
+    if want_all or args.hlo:
+        from . import hlo_audit
+
+        rep.extend(hlo_audit.run())
+
+    if args.json_out:
+        rep.write_json(args.json_out)
+    if not args.quiet:
+        print(rep.render())
+    return 0 if rep.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,767 @@
+"""Pass 3 — HLO/collective auditor over the serve-path programs (DESIGN §9).
+
+This module is also the home of the trip-count-aware HLO text analyzer that
+used to live in ``launch/hlo_analysis.py`` (that module is now a deprecation
+shim re-exporting from here): ``analyze_hlo`` parses post-SPMD HLO text,
+multiplies flops/bytes/collectives by counted-loop trip counts, and models
+HBM traffic at fusion granularity. The auditor builds on it:
+
+  HLO001  collective budget — each lowered serve program's collective census
+          must stay inside the budget its declared sharding pattern implies
+          (zero collectives off-mesh; bounded all-gather/all-reduce for the
+          column-parallel TP pattern; all-to-all / reduce-scatter /
+          collective-permute never appear in the serve path)
+  HLO002  int8 KV hygiene — no ``convert`` to f32 whose result is as large
+          as the int8 KV pool: dequantization must happen blockwise inside
+          the kernel beat, never by materializing an f32 copy of the pool
+  HLO003  compile-count budget — the bucketed-prefill cache must compile
+          exactly one program per (bucket, batch) and replay from cache
+  HLO004  a serve program failed to lower/compile at all
+
+The audited programs are the real serving binaries: the bucketed-prefill
+program, the dense continuous-batching decode tick, the paged decode tick
+and the chunked-prefill program — lowered from the smoke config (CPU-sized)
+exactly as ``SlotScheduler``/``PagedSlotScheduler`` build them, and the tp=2
+variants of each when the process has >= 2 devices (CI forces 8 host
+devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from .report import Finding, Report
+
+__all__ = [
+    "analyze_hlo",
+    "HloAnalysis",
+    "HBM_CAP_BYTES",
+    "CollectiveBudget",
+    "audit_hlo_text",
+    "audit_compile_counts",
+    "collective_budget_for",
+    "serve_programs",
+    "run",
+]
+
+PASS = "hlo_audit"
+
+# ---------------------------------------------------------------------------
+# Trip-count-aware HLO text analysis (moved from launch/hlo_analysis.py)
+# ---------------------------------------------------------------------------
+#
+# Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE
+# (verified: an 8-step lax.scan reports 1/8 the flops of its unrolled twin),
+# and the CPU backend's buffer model materializes broadcast intermediates
+# that a TPU fusion would keep in VMEM/VREGs. For the roofline terms we need
+#
+#   * flops multiplied by loop trip counts (scan over layers/microbatches/
+#     sequence — *all* the frameworks' compute lives in counted loops);
+#   * HBM bytes modeled at fusion granularity (a fusion reads its operands
+#     and writes its result; its interior never touches HBM) with slice-type
+#     ops charged at the slice size, not the full buffer;
+#   * collective payload bytes, also trip-multiplied, with replica-group
+#     sizes so per-device wire traffic can be estimated per op type.
+#
+# The analyzer parses the final HLO text (the same artifact a human reads),
+# builds the computation call graph, extracts trip counts from counted-loop
+# conditions (compare against a constant), and aggregates:
+#
+#   flops:  dot = 2 * out_elems * contracted; elementwise = out_elems;
+#           reduce = in_elems; fusion = sum of interior arithmetic.
+#   bytes:  per top-level op: operands + result (fusion interior free);
+#           dynamic-slice/gather etc. charged at slice size.
+#   collectives: per op kind: count, payload(result) bytes, operand bytes
+#           (= payload adjusted by group size per op semantics), and
+#           estimated per-device wire bytes (ring algorithms).
+#
+# It is a *model* — good to ~10-20% on op mixes dominated by dots/fusions —
+# and is validated in tests against unrolled cost_analysis on reference
+# programs.
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^(.*?)\s*\b([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "compare",
+    "select", "and", "or", "xor", "not", "negate", "abs", "sign", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "tanh", "logistic", "rsqrt",
+    "sqrt", "cbrt", "power", "remainder", "atan2", "clamp", "convert", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "is-finite", "cosine",
+    "sine", "tan", "erf", "shift-left", "shift-right-logical",
+    "shift-right-arithmetic", "popcnt", "clz", "stochastic-convert",
+}
+_ZERO_FLOPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast", "reshape",
+    "broadcast", "iota", "after-all", "partition-id", "replica-id", "domain",
+    "opt-barrier", "custom-call", "infeed", "outfeed", "rng-get-and-update-state",
+    "copy-start", "copy-done", "bitcast-convert",
+}
+_MOVE_OPS = {"copy", "transpose", "reverse", "slice", "concatenate", "pad",
+             "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+             "select-and-scatter", "sort"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, int]]:
+    """[(dtype, elems), ...] for possibly-tuple type strings."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DT_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(shapes: List[Tuple[str, int]]) -> int:
+    return sum(_DT_BYTES[dt] * n for dt, n in shapes)
+
+
+def _elems_of(shapes: List[Tuple[str, int]]) -> int:
+    return sum(n for _, n in shapes)
+
+
+class _Instr:
+    __slots__ = ("name", "op", "type_str", "shapes", "operands", "attrs")
+
+    def __init__(self, name, op, type_str, operands, attrs):
+        self.name = name
+        self.op = op
+        self.type_str = type_str
+        self.shapes = _shape_list(type_str)
+        self.operands = operands
+        self.attrs = attrs
+
+
+def _parse(hlo: str) -> Dict[str, Dict[str, _Instr]]:
+    comps: Dict[str, Dict[str, _Instr]] = {}
+    cur: Optional[str] = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.endswith("{") and ("->" in line or line.startswith("ENTRY")):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = {}
+                    if line.strip().startswith("ENTRY"):
+                        entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OP_RE.match(rest)
+        if not om:
+            continue
+        type_str, op, tail = om.groups()
+        # operand names: inside the first balanced paren chunk
+        depth, i = 1, 0
+        while i < len(tail) and depth:
+            if tail[i] == "(":
+                depth += 1
+            elif tail[i] == ")":
+                depth -= 1
+            i += 1
+        arg_str, attr_str = tail[: i - 1], tail[i:]
+        operands = re.findall(r"%([\w.\-]+)", arg_str)
+        comps[cur][name] = _Instr(name, op, type_str, operands, attr_str)
+    comps["__entry__"] = comps.get(entry, {})
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+def _called(attrs: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-]+)", attrs)
+    return m.group(1) if m else None
+
+
+def _branch_comps(attrs: str) -> List[str]:
+    out = []
+    m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+    if m:
+        out += re.findall(r"%?([\w.\-]+)", m.group(1))
+    for key in ("true_computation", "false_computation"):
+        c = _called(attrs, key)
+        if c:
+            out.append(c)
+    return out
+
+
+def _group_size(attrs: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]*)\}", attrs)
+    if m:
+        ids = [t for t in m.group(1).split(",") if t.strip()]
+        return max(len(ids), 1)
+    return n_devices
+
+
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*[su](?:8|16|32|64)\[\]\s*constant\((\d+)\)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CMP_RE = re.compile(
+    r"compare\(%?([\w.\-]+),\s*%?([\w.\-]+)\),\s*direction=(LT|GT|LE|GE|NE)")
+
+
+def _trip_counts_from_text(hlo: str) -> Dict[str, int]:
+    """body_comp -> trip count, parsed from condition computations."""
+    # constants per computation
+    comps_raw: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and ("->" in s or s.startswith("ENTRY")):
+                m = _COMP_HDR_RE.match(s)
+                if m:
+                    cur = m.group(1)
+                    comps_raw[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        comps_raw[cur].append(s)
+
+    consts: Dict[str, Dict[str, int]] = defaultdict(dict)
+    for comp, lines in comps_raw.items():
+        for l in lines:
+            for name, val in _CONST_RE.findall(l):
+                consts[comp][name] = int(val)
+
+    trips: Dict[str, int] = {}
+    for comp, lines in comps_raw.items():
+        for l in lines:
+            for cond, body in _WHILE_RE.findall(l):
+                trip = None
+                for cl in comps_raw.get(cond, []):
+                    m = _CMP_RE.search(cl)
+                    if m:
+                        a, b, _d = m.groups()
+                        trip = consts[cond].get(b, consts[cond].get(a))
+                        break
+                if trip is None:
+                    vals = list(consts.get(cond, {}).values())
+                    trip = max(vals) if vals else 1
+                trips[body] = max(trips.get(body, 0), int(trip))
+                trips[cond] = trips[body]
+    return trips
+
+
+class HloAnalysis(dict):
+    pass
+
+
+# buffers larger than a device's physical HBM cannot exist in a runnable TPU
+# program; the CPU emitter creates them by materializing (and loop-hoisting)
+# fusion interiors it cannot fuse. They are emulation artifacts, excluded
+# from the byte model (EXPERIMENTS.md §Roofline documents this).
+HBM_CAP_BYTES = 8 << 30
+
+
+def analyze_hlo(hlo: str, n_devices: int = 1, hbm_cap: float = HBM_CAP_BYTES) -> HloAnalysis:
+    comps = _parse(hlo)
+    entry_name = comps.pop("__entry_name__")  # type: ignore
+    comps.pop("__entry__")
+    trips = _trip_counts_from_text(hlo)
+
+    # ---- interior flops of a computation (fusion bodies, to_apply, ...) ----
+    flops_memo: Dict[str, float] = {}
+
+    def comp_flops(cname: str, interior: bool) -> float:
+        key = f"{cname}|{interior}"
+        if key in flops_memo:
+            return flops_memo[key]
+        flops_memo[key] = 0.0  # cycle guard
+        total = 0.0
+        for ins in comps.get(cname, {}).values():
+            total += instr_flops(cname, ins, interior)
+        flops_memo[key] = total
+        return total
+
+    def operand_elems(cname: str, ins: _Instr, idx: int) -> float:
+        table = comps.get(cname, {})
+        if idx < len(ins.operands):
+            op = table.get(ins.operands[idx])
+            if op is not None:
+                return _elems_of(op.shapes)
+        return _elems_of(ins.shapes)
+
+    def instr_flops(cname: str, ins: _Instr, interior: bool) -> float:
+        op = ins.op
+        if op in _ZERO_FLOPS or op in _COLLECTIVES or op == "while":
+            return 0.0
+        if op in _MOVE_OPS:
+            return 0.0
+        if op in _ELEMENTWISE or op.startswith("rng"):
+            return float(_elems_of(ins.shapes))
+        if op == "dot":
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+            contracted = 1.0
+            table = comps.get(cname, {})
+            lhs = table.get(ins.operands[0]) if ins.operands else None
+            if m and lhs is not None:
+                dims_m = _SHAPE_RE.search(lhs.type_str)
+                if dims_m:
+                    dims = [int(d) for d in dims_m.group(2).split(",") if d]
+                    for di in m.group(1).split(","):
+                        if di and int(di) < len(dims):
+                            contracted *= dims[int(di)]
+            return 2.0 * _elems_of(ins.shapes) * contracted
+        if op in ("reduce", "reduce-window"):
+            return float(operand_elems(cname, ins, 0))
+        if op == "convolution":
+            # rough: 2 * out_elems * (kernel elems / out_channels)
+            return 2.0 * _elems_of(ins.shapes)
+        if op == "fusion":
+            callee = _called(ins.attrs, "calls")
+            return comp_flops(callee, True) if callee else 0.0
+        if op in ("call", "conditional"):
+            total = 0.0
+            c = _called(ins.attrs, "to_apply")
+            if c:
+                total += comp_flops(c, True)
+            for b in _branch_comps(ins.attrs):
+                total += comp_flops(b, True)
+            return total
+        if op in ("map", "sort", "select-and-scatter", "scatter", "reduce-scatter"):
+            return float(_elems_of(ins.shapes))
+        return 0.0
+
+    def instr_bytes(cname: str, ins: _Instr) -> float:
+        """Top-level HBM traffic under a TPU-fusion model.
+
+        The CPU backend leaves elementwise chains unfused in the final HLO;
+        a TPU would fuse them into their consumers, so bare elementwise /
+        broadcast / compare / select ops are charged ZERO bytes here — only
+        structural traffic counts: dots and fusions (operands + result),
+        data movement (2x the moved slice), and reduce results. This is the
+        operand-traffic floor a hand-written kernel (kernels/cac_matmul.py)
+        actually achieves; scan-carry round-trips are charged at the while
+        boundary via the body ROOT fusion reads of the carry.
+        """
+        op = ins.op
+        table = comps.get(cname, {})
+        if op in _ZERO_FLOPS or op in _COLLECTIVES or op == "while":
+            return 0.0
+        if op in ("dynamic-slice", "gather", "slice"):
+            return 2.0 * _bytes_of(ins.shapes)
+        if op == "dynamic-update-slice":
+            upd = table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            ub = _bytes_of(upd.shapes) if upd else _bytes_of(ins.shapes)
+            return 2.0 * ub
+        if op in ("scatter", "select-and-scatter"):
+            return 2.0 * _bytes_of(ins.shapes)
+        if op in ("copy", "transpose", "reverse", "concatenate", "pad", "sort"):
+            return 2.0 * _bytes_of(ins.shapes)
+        if op in _ELEMENTWISE or op.startswith("rng"):
+            return 0.0  # fusable on TPU; charged where the data is born
+
+        def _resolve(o):
+            # look through zero-cost reshaping ops to the data's producer
+            hops = 0
+            while o is not None and o.op in ("bitcast", "bitcast-convert",
+                                             "reshape") and o.operands and hops < 8:
+                o = table.get(o.operands[0])
+                hops += 1
+            return o
+
+        def _operand_bytes(require_buffer: bool) -> float:
+            b = 0.0
+            for name in ins.operands:
+                o = _resolve(table.get(name))
+                if o is None:
+                    continue
+                # virtual producers: a TPU fusion regenerates these in-register
+                # (the CPU emitter materializes them — an emulation artifact):
+                # constants/iota, ALL broadcasts (data charged at the *source*
+                # buffer), and — when the consumer can fuse (require_buffer) —
+                # elementwise chains and sibling fusions.
+                if o.op in ("constant", "iota", "broadcast"):
+                    continue
+                if require_buffer and o.op in _ELEMENTWISE.union({"fusion"}):
+                    continue
+                ob_ = _bytes_of(o.shapes)
+                if ob_ > hbm_cap:  # CPU-emulation artifact (see HBM_CAP_BYTES)
+                    continue
+                b += ob_
+            return b
+
+        if op in ("dot", "convolution", "cholesky", "triangular-solve"):
+            return _bytes_of(ins.shapes) + _operand_bytes(require_buffer=False)
+        if op in ("fusion", "reduce", "reduce-window", "call", "conditional", "map"):
+            out_b = _bytes_of(ins.shapes) if op == "reduce" else 0.0
+            return out_b + _operand_bytes(require_buffer=True)
+        return 0.0
+
+    # ---- multipliers over while nesting ----
+    mult: Dict[str, float] = defaultdict(float)
+    mult[entry_name] = 1.0
+    counted = [entry_name]
+    frontier = [entry_name]
+    seen = set(frontier)
+    while frontier:
+        nxt = []
+        for cname in frontier:
+            for ins in comps.get(cname, {}).values():
+                if ins.op == "while":
+                    cond = _called(ins.attrs, "condition")
+                    body = _called(ins.attrs, "body")
+                    t = trips.get(body, 1)
+                    for child in (cond, body):
+                        if child:
+                            mult[child] += mult[cname] * t
+                            if child not in seen:
+                                seen.add(child)
+                                counted.append(child)
+                                nxt.append(child)
+        frontier = nxt
+
+    # ---- aggregate ----
+    flops = 0.0
+    bytes_ = 0.0
+    coll = {
+        k: {"count": 0.0, "payload_bytes": 0.0, "operand_bytes": 0.0,
+            "wire_bytes": 0.0}
+        for k in _COLLECTIVES
+    }
+    for cname in counted:
+        mlt = mult[cname]
+        for ins in comps.get(cname, {}).values():
+            base_op = ins.op
+            async_start = base_op.endswith("-start")
+            op = base_op[:-6] if async_start else base_op
+            if base_op.endswith("-done"):
+                continue
+            if op in _COLLECTIVES:
+                shapes = ins.shapes
+                if async_start and len(shapes) > 1:
+                    shapes = shapes[len(shapes) // 2:]
+                payload = _bytes_of(shapes)
+                gs = _group_size(ins.attrs, n_devices)
+                if op == "all-reduce":
+                    operand, wire = payload, 2.0 * payload * (gs - 1) / max(gs, 1)
+                elif op == "all-gather":
+                    operand, wire = payload / max(gs, 1), payload * (gs - 1) / max(gs, 1)
+                elif op == "reduce-scatter":
+                    operand, wire = payload * gs, payload * (gs - 1)
+                elif op == "all-to-all":
+                    operand, wire = payload, payload * (gs - 1) / max(gs, 1)
+                else:  # collective-permute
+                    operand, wire = payload, payload
+                c = coll[op]
+                c["count"] += mlt
+                c["payload_bytes"] += mlt * payload
+                c["operand_bytes"] += mlt * operand
+                c["wire_bytes"] += mlt * wire
+                continue
+            flops += mlt * instr_flops(cname, ins, False)
+            bytes_ += mlt * instr_bytes(cname, ins)
+
+    coll["total"] = {
+        k: sum(c[k] for c in coll.values()) for k in
+        ("count", "payload_bytes", "operand_bytes", "wire_bytes")
+    }
+    return HloAnalysis(
+        flops=flops,
+        bytes=bytes_,
+        collectives=coll,
+        trip_counts={k: v for k, v in trips.items()},
+        n_computations=len(comps),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The auditor
+# ---------------------------------------------------------------------------
+
+
+def _f(code: str, where: str, message: str, hint: str, **extra) -> Finding:
+    return Finding(pass_name=PASS, code=code, where=where, message=message,
+                   hint=hint, extra=extra)
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Max trip-multiplied count per collective kind for one program.
+
+    Kinds absent from ``allowed`` are budgeted at zero — any occurrence is
+    a finding. ``collective_budget_for`` derives the budget the declared
+    sharding pattern implies."""
+
+    allowed: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def limit(self, kind: str) -> float:
+        return float(self.allowed.get(kind, 0.0))
+
+
+def collective_budget_for(tp: int, n_layers: int) -> CollectiveBudget:
+    """The serve path's declared pattern (kernels/ops.py module docstring):
+    column-parallel linears + head-parallel attention under shard_map. Per
+    layer that is at most: one gather/reduce around each of qkv, attn-out,
+    mlp-in, mlp-out — plus embedding/lm-head edges. all-to-all and
+    reduce-scatter never appear. collective-permute appears only in the
+    decode tick, where GSPMD lowers the dynamic-update-slice into the
+    head-sharded KV cache as a halo exchange (the written row straddles the
+    shard boundary when n_kv_heads % tp != 0) plus one resharding pair per
+    layer around the attention output — bounded at 3 per layer."""
+    if tp <= 1:
+        return CollectiveBudget({})
+    per_layer = 4
+    slack = 8  # embedding, lm-head, final norm, argmax
+    return CollectiveBudget({
+        "all-gather": per_layer * n_layers + slack,
+        "all-reduce": per_layer * n_layers + slack,
+        "collective-permute": 3 * n_layers,
+    })
+
+
+def audit_hlo_text(program: str, hlo: str, n_devices: int = 1,
+                   budget: Optional[CollectiveBudget] = None,
+                   int8_kv_min_elems: Optional[int] = None,
+                   ) -> Tuple[List[Finding], Dict]:
+    """Audit one lowered program's HLO text. Returns (findings, census)."""
+    budget = budget or CollectiveBudget({})
+    st = analyze_hlo(hlo, n_devices)
+    findings: List[Finding] = []
+    for kind in _COLLECTIVES:
+        count = st["collectives"][kind]["count"]
+        lim = budget.limit(kind)
+        if count > lim:
+            findings.append(_f(
+                "HLO001", program,
+                f"{count:g} {kind} op(s) (trip-multiplied) vs budget {lim:g}",
+                "the serve path declares column-parallel linears + "
+                "head-parallel attention only — an extra collective means a "
+                "sharding constraint leaked (check in/out_shardings and "
+                "PartitionSpecs on the new op)",
+                kind=kind, count=count, budget=lim))
+    if int8_kv_min_elems:
+        findings.extend(_f32_upcast_findings(program, hlo, int8_kv_min_elems))
+    census = {
+        "flops": st["flops"],
+        "bytes": st["bytes"],
+        "collectives": {k: dict(v) for k, v in st["collectives"].items()},
+        "n_devices": n_devices,
+    }
+    return findings, census
+
+
+def _f32_upcast_findings(program: str, hlo: str,
+                         min_elems: int) -> List[Finding]:
+    """Flag ``convert`` instructions producing an f32/f64 result at least as
+    large as the int8 KV pool from an s8/u8 operand: pool-sized dequant means
+    the int8 pool is silently materialized in float — the memory win is gone.
+    Blockwise dequant inside the kernel beat converts (bs, bh, d) windows,
+    orders of magnitude below ``min_elems``."""
+    comps = _parse(hlo)
+    comps.pop("__entry_name__", None)
+    comps.pop("__entry__", None)
+    out: List[Finding] = []
+    for cname, table in comps.items():
+        for ins in table.values():
+            if ins.op != "convert" or not ins.operands:
+                continue
+            if not ins.shapes or ins.shapes[0][0] not in ("f32", "f64"):
+                continue
+            elems = ins.shapes[0][1]
+            if elems < min_elems:
+                continue
+            src = table.get(ins.operands[0])
+            if src is None or not src.shapes or src.shapes[0][0] not in ("s8", "u8"):
+                continue
+            out.append(_f(
+                "HLO002", program,
+                f"pool-sized f32 upcast: convert {src.shapes[0][0]}"
+                f"[{src.shapes[0][1]}] -> f32[{elems}] in {cname}",
+                "dequantize int8 KV blockwise inside the kernel beat "
+                "(kernels/paged_attn.py), never the whole pool",
+                computation=cname, elems=elems))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serve-path program construction (smoke config, real scheduler builders)
+# ---------------------------------------------------------------------------
+
+
+def serve_programs(arch: str = "smollm-360m", *, max_len: int = 32,
+                   n_slots: int = 2, tp: int = 1,
+                   quantized_kv: bool = False) -> Dict[str, Dict]:
+    """Lower the real serving programs for the smoke config; returns
+    program name -> {"hlo": text, "n_devices": int, "n_layers": int,
+    "int8_kv_min_elems": int|None}. Raises on build failure — ``run``
+    converts that into an HLO004 finding."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_smoke
+    from repro.models import build_model
+    from repro.nn.module import unbox
+    from repro.serve.scheduler import PagedSlotScheduler, SlotScheduler
+
+    cfg = get_smoke(arch)
+    api = build_model(cfg, phase="serve")
+    params = unbox(api.init(jax.random.PRNGKey(0)))
+
+    mesh = None
+    if tp > 1:
+        from repro.distributed.meshes import make_mesh
+        mesh = make_mesh((1, tp), ("data", "model"))
+    n_devices = tp if tp > 1 else 1
+
+    out: Dict[str, Dict] = {}
+
+    def record(name, lowered, int8_elems=None):
+        out[name] = {
+            "hlo": lowered.compile().as_text(),
+            "n_devices": n_devices,
+            "n_layers": cfg.n_layers,
+            "int8_kv_min_elems": int8_elems,
+        }
+
+    sched = SlotScheduler(api, params, cfg, n_slots=n_slots, max_len=max_len,
+                          mesh=mesh)
+    tok = jnp.zeros((n_slots,), jnp.int32)
+    pos = jnp.zeros((n_slots,), jnp.int32)
+    with sched._mesh_ctx():
+        record("decode_tick", sched._tick_fn.lower(
+            sched.params, sched.kv.cache, tok, pos))
+        bucket = sched.prefill.bucket_for(max_len // 2)
+        toks = jnp.zeros((1, bucket), jnp.int32)
+        last = jnp.zeros((1,), jnp.int32)
+        record("prefill_bucket", sched.prefill.fn(bucket, 1).lower(
+            sched.params, toks, last))
+
+    psched = PagedSlotScheduler(api, params, cfg, n_slots=n_slots,
+                                max_len=max_len, block_size=8, chunk=8,
+                                mesh=mesh, quantized_kv=quantized_kv)
+    int8_elems = None
+    if quantized_kv:
+        sizes = [int(np.prod(leaf.shape))
+                 for leaf in jax.tree_util.tree_leaves(psched.kv.cache)
+                 if leaf.dtype in (jnp.int8, jnp.uint8)]
+        int8_elems = min(sizes) if sizes else None
+    tables = jnp.asarray(psched.kv.tables)
+    with psched._mesh_ctx():
+        record("paged_tick", psched._tick_fn.lower(
+            psched.params, psched.kv.cache, tok, pos, tables),
+            int8_elems)
+        chunk_toks = jnp.zeros((1, psched.chunk), jnp.int32)
+        one = jnp.zeros((1,), jnp.int32)
+        record("prefill_chunk", psched.prefill.fn().lower(
+            psched.params, psched.kv.cache, chunk_toks, tables[:1], one, one),
+            int8_elems)
+    return out
+
+
+def audit_compile_counts(max_len: int = 256) -> Tuple[List[Finding], Dict]:
+    """HLO003: the bucketed-prefill cache discipline, checked against a stub
+    model so it is pure cache mechanics: streaming every prompt length
+    1..max_len must compile exactly one program per distinct (bucket, 1)
+    shape, and replaying the stream must compile nothing new."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve.compile_cache import BucketedPrefill, bucket_for
+
+    class _StubAPI:
+        @staticmethod
+        def prefill(params, batch, *, max_len, quantized=False, last_index=None):
+            toks = batch["tokens"]
+            return (jnp.zeros((toks.shape[0], 1, 4), jnp.float32) +
+                    last_index[:, None, None], jnp.zeros((1,), jnp.float32))
+
+    pf = BucketedPrefill(_StubAPI(), max_len=max_len)
+    lens = list(range(1, max_len + 1))
+    expected = len({bucket_for(ln, max_len) for ln in lens})
+    for ln in lens:
+        pf(None, np.zeros(ln, np.int32))
+    findings: List[Finding] = []
+    first_pass = pf.misses
+    if first_pass != expected:
+        findings.append(_f(
+            "HLO003", "bucketed_prefill",
+            f"{first_pass} compiles for {len(lens)} prompt lengths; budget is "
+            f"one per bucket = {expected}",
+            "bucket_for must map every length to a power-of-two bucket and "
+            "fn() must cache per (bucket, batch)",
+            compiles=first_pass, budget=expected))
+    for ln in lens:
+        pf(None, np.zeros(ln, np.int32))
+    if pf.misses != first_pass:
+        findings.append(_f(
+            "HLO003", "bucketed_prefill",
+            f"replaying the same stream compiled {pf.misses - first_pass} new "
+            "program(s); steady state must be all cache hits",
+            "the (bucket, batch) key must be shape-only — no per-request "
+            "state may leak into it",
+            extra_compiles=pf.misses - first_pass))
+    data = {"prompt_lengths": len(lens), "distinct_buckets": expected,
+            "compiles_first_pass": first_pass,
+            "compiles_replay": pf.misses - first_pass}
+    return findings, data
+
+
+def run(arch: str = "smollm-360m", tp_variants: bool = True) -> Report:
+    import jax
+
+    rep = Report(passes_run=[PASS])
+    census: Dict[str, Dict] = {}
+
+    plans = [("", 1, False), ("", 1, True)]
+    if tp_variants and len(jax.devices()) >= 2:
+        plans.append(("tp2:", 2, False))
+    seen = set()
+    for prefix, tp, quant in plans:
+        try:
+            progs = serve_programs(arch, tp=tp, quantized_kv=quant)
+        except Exception as e:
+            rep.add(_f("HLO004", f"{prefix or 'serve'}[quantized={quant}]",
+                       f"serve programs failed to build: "
+                       f"{type(e).__name__}: {e}",
+                       "run the serving tier-1 tests — the serve path is "
+                       "broken, not just unaudited"))
+            continue
+        for name, p in progs.items():
+            label = f"{prefix}{name}" + ("/int8kv" if quant else "")
+            if (prefix, name, quant and p["int8_kv_min_elems"] is not None) in seen:
+                continue
+            # the un-quantized paged programs repeat in the quantized plan
+            # run only the int8 variants the second time around
+            if quant and p["int8_kv_min_elems"] is None:
+                continue
+            seen.add((prefix, name, quant))
+            budget = collective_budget_for(p["n_devices"], p["n_layers"])
+            fs, c = audit_hlo_text(label, p["hlo"], p["n_devices"], budget,
+                                   int8_kv_min_elems=p["int8_kv_min_elems"])
+            rep.findings.extend(fs)
+            census[label] = c
+
+    fs, cc = audit_compile_counts()
+    rep.findings.extend(fs)
+    rep.data[PASS] = {"programs": census, "compile_counts": cc, "arch": arch}
+    return rep

@@ -1,0 +1,405 @@
+"""Pass 1 — ruff-style AST lints for JAX/serving pitfalls (DESIGN.md §9).
+
+Rules (each fires a :class:`~repro.analysis.report.Finding` with a code, a
+message and a fix hint):
+
+  RPA001  host-sync call (``.item()`` / ``.tolist()`` / ``np.asarray`` /
+          ``np.array`` / ``jax.device_get`` / ``float(...)``) inside
+          jit/pallas-traced code or per-tick scheduler code. Inside a trace
+          these either fail or silently force a device round-trip per step.
+  RPA002  ``jax.jit`` / ``jax.pmap`` / ``pl.pallas_call`` constructed inside
+          a ``for``/``while`` loop — every iteration builds a fresh callable
+          whose cache entry can never be shared (recompile hazard).
+  RPA003  Python ``if``/``while``/ternary branching on a ``jnp.*`` expression
+          inside traced code — a traced value has no Python truth value;
+          this is a TracerBoolConversionError at best, a silent
+          trace-specialization at worst.
+  RPA004  dict-ordering-dependent key construction: ``tuple(d.items())`` /
+          ``list(d.items())`` without ``sorted``, or ``json.dump(s)``
+          without ``sort_keys=True`` — two semantically equal dicts built in
+          different orders produce different cache keys / artifacts.
+  RPA005  a timing region (>= 2 ``time.perf_counter``/``time.time``/
+          ``time.monotonic`` calls in one function) that also launches JAX
+          work but never calls ``block_until_ready`` — it times dispatch,
+          not execution.
+
+Suppression: append ``# repro: noqa-RPA001`` (or ``# noqa: RPA001``, or a
+blanket ``# repro: noqa``) to the flagged line. Suppressions should carry a
+comment explaining why the construct is intentional.
+
+Traced-code detection is deliberately conservative (few false positives, at
+the cost of false negatives — the contract verifier and HLO auditor catch
+what slips through): a function is *traced* when it is decorated with
+``jax.jit``/``pl.pallas_call``-adjacent transforms, passed by name to one
+(``jax.jit(f)``, ``pl.pallas_call(kernel)``, ``lax.scan(body, ...)``,
+``f.defvjp(fwd, bwd)``…), or lexically nested inside such a function.
+*Per-tick scheduler code* — the host half of the serving hot loop — is the
+``HOT_TICK_FUNCTIONS`` set below: methods that run once per decode tick,
+where an unintended host sync stalls every active slot.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .report import Finding, Report
+
+__all__ = ["RULES", "lint_file", "lint_paths", "run"]
+
+PASS = "lints"
+
+RULES: Dict[str, Tuple[str, str]] = {
+    "RPA001": (
+        "host-sync call inside jit/pallas-traced or per-tick scheduler code",
+        "hoist the sync out of the traced/hot function, or keep the value on "
+        "device (jnp ops); if the sync is the function's contract, suppress "
+        "with '# repro: noqa-RPA001' and say why",
+    ),
+    "RPA002": (
+        "jit/pallas_call constructed inside a loop (recompile hazard)",
+        "build the jitted callable once outside the loop and reuse it; loop "
+        "iterations sharing one callable share one compile-cache entry",
+    ),
+    "RPA003": (
+        "Python branch on a traced (jnp) value",
+        "use jax.lax.cond/select or jnp.where; Python `if` on a tracer "
+        "either raises or bakes one branch into the compiled program",
+    ),
+    "RPA004": (
+        "dict-ordering-dependent key/artifact construction",
+        "wrap .items() in sorted(...) / pass sort_keys=True so equal dicts "
+        "serialize identically regardless of insertion order",
+    ),
+    "RPA005": (
+        "timing region launches JAX work without block_until_ready",
+        "call jax.block_until_ready(result) inside the timed region — "
+        "otherwise the timer measures async dispatch, not device execution",
+    ),
+}
+
+# Functions that run once per decode tick on the serving hot path. Module
+# key is a path suffix; an unintended host sync in these stalls every slot.
+HOT_TICK_FUNCTIONS: Dict[str, Set[str]] = {
+    "serve/scheduler.py": {"tick", "_run_tick", "_admit_one", "_admit"},
+    "serve/engine.py": {"step_batch"},
+}
+
+# entry points whose function-valued arguments run under a trace
+_TRACING_ENTRY_NAMES = {
+    "jit", "pallas_call", "pmap", "vmap", "grad", "value_and_grad",
+    "custom_vjp", "custom_jvp", "checkpoint", "remat", "scan", "fori_loop",
+    "while_loop", "cond", "switch", "shard_map", "eval_shape", "defvjp",
+    "defjvp", "named_call",
+}
+
+_HOST_SYNC_METHODS = {"item", "tolist"}
+_HOST_SYNC_NP = {"asarray", "array", "copy"}
+_TIMER_ATTRS = {"perf_counter", "time", "monotonic", "perf_counter_ns"}
+
+_NOQA_RE = re.compile(
+    r"#\s*(?:repro:\s*)?noqa(?P<codes>\s*[:\-]\s*[A-Za-z0-9,\- ]+)?")
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of a Name/Attribute chain ('' when not a plain chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _call_name(call: ast.Call) -> str:
+    return _attr_chain(call.func)
+
+
+def _tail(name: str) -> str:
+    return name.rsplit(".", 1)[-1]
+
+
+def _noqa_codes(source_lines: List[str], lineno: int) -> Optional[Set[str]]:
+    """Suppressed codes for a physical line: set of codes, empty set for a
+    blanket noqa, None when no suppression applies. A suppression lives on
+    the flagged line itself or in the contiguous pure-comment block directly
+    above it (the convention for justifications too long for one line)."""
+    if not 1 <= lineno <= len(source_lines):
+        return None
+
+    def _parse(line: str) -> Optional[Set[str]]:
+        m = _NOQA_RE.search(line)
+        if not m:
+            return None
+        codes = m.group("codes")
+        if not codes:
+            return set()  # blanket
+        toks = re.split(r"[,\s]+", codes.lstrip(" :-").strip())
+        rpa = {t.upper().replace("-", "") for t in toks
+               if t and t.upper().startswith("RPA")}
+        # a code list without any RPA code is some other tool's noqa
+        # (e.g. "# noqa: E501") — not a suppression for this linter
+        return rpa or None
+
+    got = _parse(source_lines[lineno - 1])
+    if got is not None:
+        return got
+    i = lineno - 2  # walk the comment block immediately above
+    while i >= 0 and source_lines[i].lstrip().startswith("#"):
+        got = _parse(source_lines[i])
+        if got is not None:
+            return got
+        i -= 1
+    return None
+
+
+class _ModuleIndex(ast.NodeVisitor):
+    """One pre-pass over the module: which function names are traced, and
+    where the loops are."""
+
+    def __init__(self) -> None:
+        self.traced_names: Set[str] = set()
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _tail(_call_name(node))
+        if name in _TRACING_ENTRY_NAMES:
+            for arg in node.args:
+                if isinstance(arg, ast.Name):
+                    self.traced_names.add(arg.id)
+        # functools.partial(jax.jit, f) / partial(pl.pallas_call, kernel)
+        if name == "partial" and node.args:
+            if _tail(_attr_chain(node.args[0])) in _TRACING_ENTRY_NAMES:
+                for arg in node.args[1:]:
+                    if isinstance(arg, ast.Name):
+                        self.traced_names.add(arg.id)
+        self.generic_visit(node)
+
+
+def _is_traced_decorator(dec: ast.expr) -> bool:
+    name = _tail(_attr_chain(dec))
+    if name in _TRACING_ENTRY_NAMES:
+        return True
+    if isinstance(dec, ast.Call):
+        # @functools.partial(jax.jit, ...) / @jax.jit(static_argnums=...)
+        fname = _tail(_call_name(dec))
+        if fname in _TRACING_ENTRY_NAMES:
+            return True
+        if fname == "partial" and dec.args:
+            return _tail(_attr_chain(dec.args[0])) in _TRACING_ENTRY_NAMES
+    return False
+
+
+def _contains_jnp_call(node: ast.AST) -> Optional[ast.Call]:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            chain = _call_name(sub)
+            root = chain.split(".", 1)[0]
+            if root == "jnp" or chain.startswith("jax.numpy."):
+                return sub
+    return None
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, path: str, rel: str, source: str) -> None:
+        self.path = path
+        self.rel = rel
+        self.lines = source.splitlines()
+        self.findings: List[Finding] = []
+        idx = _ModuleIndex()
+        self.tree = ast.parse(source, filename=path)
+        idx.visit(self.tree)
+        self.traced_names = idx.traced_names
+        self.hot_names = self._hot_names(rel)
+        # state stacks
+        self._trace_depth = 0
+        self._hot_depth = 0
+        self._loop_depth = 0
+        self._fn_stack: List[dict] = []
+
+    @staticmethod
+    def _hot_names(rel: str) -> Set[str]:
+        for suffix, names in HOT_TICK_FUNCTIONS.items():
+            if rel.replace(os.sep, "/").endswith(suffix):
+                return names
+        return set()
+
+    # -- reporting ----------------------------------------------------------
+
+    def _flag(self, code: str, node: ast.AST, detail: str = "") -> None:
+        noqa = _noqa_codes(self.lines, node.lineno)
+        if noqa is not None and (not noqa or code in noqa):
+            return
+        msg, hint = RULES[code]
+        if detail:
+            msg = f"{msg}: {detail}"
+        self.findings.append(Finding(
+            pass_name=PASS, code=code,
+            where=f"{self.rel}:{node.lineno}:{node.col_offset + 1}",
+            message=msg, hint=hint, line=node.lineno,
+        ))
+
+    # -- function context ---------------------------------------------------
+
+    def _visit_function(self, node) -> None:
+        traced = (
+            self._trace_depth > 0
+            or node.name in self.traced_names
+            or any(_is_traced_decorator(d) for d in node.decorator_list)
+        )
+        hot = self._hot_depth > 0 or node.name in self.hot_names
+        self._trace_depth += traced
+        self._hot_depth += hot
+        # RPA005 bookkeeping is per-function (not inherited by nested defs)
+        self._fn_stack.append({"timers": [], "jax_calls": 0, "synced": False})
+        # a function defined inside a loop is built per-iteration anyway, so
+        # its jit calls are not *extra* recompiles; reset loop depth inside
+        outer_loop, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = outer_loop
+        st = self._fn_stack.pop()
+        if len(st["timers"]) >= 2 and st["jax_calls"] and not st["synced"]:
+            self._flag("RPA005", st["timers"][1],
+                       f"in function {node.name!r}")
+        self._trace_depth -= traced
+        self._hot_depth -= hot
+
+    visit_FunctionDef = _visit_function
+    visit_AsyncFunctionDef = _visit_function
+
+    # -- loops (RPA002) -----------------------------------------------------
+
+    def _visit_loop(self, node) -> None:
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_For = _visit_loop
+    visit_AsyncFor = _visit_loop
+    visit_While = _visit_loop
+
+    # -- branches (RPA003) --------------------------------------------------
+
+    def _check_branch(self, node, test: ast.expr) -> None:
+        if self._trace_depth > 0:
+            call = _contains_jnp_call(test)
+            if call is not None:
+                self._flag("RPA003", node,
+                           f"test calls {_call_name(call)}(...)")
+        self.generic_visit(node)
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_branch(node, node.test)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_branch(node, node.test)
+
+    # While tests double as loops for RPA002
+    def visit_While(self, node: ast.While) -> None:  # noqa-RPA002 (shadow)
+        if self._trace_depth > 0:
+            call = _contains_jnp_call(node.test)
+            if call is not None:
+                self._flag("RPA003", node, f"test calls {_call_name(call)}(...)")
+        self._visit_loop(node)
+
+    # -- calls (RPA001 / RPA002 / RPA004 / RPA005) --------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        chain = _call_name(node)
+        name = _tail(chain)
+        root = chain.split(".", 1)[0]
+
+        if self._fn_stack:
+            st = self._fn_stack[-1]
+            if root == "time" and name in _TIMER_ATTRS:
+                st["timers"].append(node)
+            if name == "block_until_ready":
+                st["synced"] = True
+            if root in ("jax", "jnp", "ops") or ".".join(
+                    chain.split(".")[:2]) == "jax.numpy":
+                if name != "block_until_ready":
+                    st["jax_calls"] += 1
+
+        # RPA002: fresh jit/pallas_call per loop iteration
+        if self._loop_depth > 0 and name in ("jit", "pallas_call", "pmap"):
+            self._flag("RPA002", node, f"{chain or name}(...) in a loop body")
+
+        # RPA001: host syncs in traced / hot-tick code
+        if self._trace_depth > 0 or self._hot_depth > 0:
+            ctx = "traced" if self._trace_depth > 0 else "per-tick"
+            if name in _HOST_SYNC_METHODS and isinstance(node.func, ast.Attribute):
+                self._flag("RPA001", node, f".{name}() in {ctx} code")
+            elif root in ("np", "numpy") and name in _HOST_SYNC_NP \
+                    and not (node.args and isinstance(
+                        node.args[0], (ast.List, ast.Tuple, ast.ListComp,
+                                       ast.GeneratorExp, ast.Constant))):
+                # np.array over a Python literal/comprehension never touches
+                # a device buffer — only conversions of (possibly) device
+                # values count as syncs
+                self._flag("RPA001", node, f"{chain}(...) in {ctx} code")
+            elif chain == "jax.device_get":
+                self._flag("RPA001", node, f"{chain}(...) in {ctx} code")
+            elif isinstance(node.func, ast.Name) and node.func.id == "float" \
+                    and node.args and not isinstance(node.args[0], ast.Constant):
+                self._flag("RPA001", node, f"float(...) in {ctx} code")
+
+        # RPA004: unordered dict serialization
+        if name in ("dumps", "dump") and root == "json":
+            kwargs = {kw.arg for kw in node.keywords}
+            if "sort_keys" not in kwargs:
+                self._flag("RPA004", node, f"json.{name} without sort_keys=True")
+        if isinstance(node.func, ast.Name) and node.func.id in ("tuple", "list") \
+                and len(node.args) == 1:
+            arg = node.args[0]
+            if isinstance(arg, ast.Call) and isinstance(arg.func, ast.Attribute) \
+                    and arg.func.attr == "items":
+                self._flag("RPA004", node,
+                           f"{node.func.id}(<dict>.items()) without sorted(...)")
+
+        self.generic_visit(node)
+
+
+def lint_file(path: str, root: str = ".") -> List[Finding]:
+    rel = os.path.relpath(path, root)
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    try:
+        linter = _Linter(path, rel, source)
+    except SyntaxError as e:
+        return [Finding(pass_name=PASS, code="RPA000", where=f"{rel}:{e.lineno}",
+                        message=f"syntax error: {e.msg}", line=e.lineno)]
+    linter.visit(linter.tree)
+    return sorted(linter.findings, key=lambda f: (f.line or 0, f.code))
+
+
+def iter_py_files(paths: Iterable[str]) -> List[str]:
+    out: List[str] = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            out.append(p)
+        elif os.path.isdir(p):
+            for base, dirs, files in os.walk(p):
+                dirs[:] = [d for d in dirs if not d.startswith((".", "__pycache__"))]
+                out.extend(os.path.join(base, f) for f in files if f.endswith(".py"))
+    return sorted(out)
+
+
+def lint_paths(paths: Iterable[str], root: str = ".") -> Report:
+    rep = Report(passes_run=[PASS])
+    files = iter_py_files(paths)
+    for f in files:
+        rep.findings.extend(lint_file(f, root=root))
+    rep.data[PASS] = {
+        "n_files": len(files),
+        "rules": {code: RULES[code][0] for code in RULES},
+    }
+    return rep
+
+
+def run(root: str = ".", paths: Optional[List[str]] = None) -> Report:
+    """Lint the default sweep set (``src/`` + ``benchmarks/`` under root)."""
+    if paths is None:
+        paths = [os.path.join(root, "src"), os.path.join(root, "benchmarks")]
+    return lint_paths(paths, root=root)

@@ -70,7 +70,7 @@ def save(directory: str, step: int, tree, *, extra: Optional[Dict] = None) -> st
     os.makedirs(tmp, exist_ok=True)
     np.savez(os.path.join(tmp, "arrays.npz"), **host)
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+        json.dump(manifest, f, sort_keys=True)
     if os.path.exists(final):  # idempotent re-save of the same step
         import shutil
 

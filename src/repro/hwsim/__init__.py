@@ -1,5 +1,8 @@
-"""repro.hwsim — calibrated analytic FPGA resource/latency model (DESIGN §7)."""
+"""repro.hwsim — calibrated analytic FPGA resource/latency model (DESIGN §7)
+plus the shared TPU device cost terms (roofline peaks, kernel VMEM budget)."""
 from .resource import (
+    DEVICE_TERMS,
+    KERNEL_VMEM_BUDGET,
     PAPER_TABLE3,
     AcceleratorModel,
     adp,
@@ -8,9 +11,12 @@ from .resource import (
     latency_us,
     pdp,
     pe_luts,
+    vmem_budget_bytes,
 )
 
 __all__ = [
+    "DEVICE_TERMS",
+    "KERNEL_VMEM_BUDGET",
     "PAPER_TABLE3",
     "AcceleratorModel",
     "pe_luts",
@@ -19,4 +25,5 @@ __all__ = [
     "calibrate_latency",
     "adp",
     "pdp",
+    "vmem_budget_bytes",
 ]

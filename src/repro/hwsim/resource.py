@@ -24,6 +24,8 @@ import numpy as np
 
 __all__ = [
     "PAPER_TABLE3",
+    "DEVICE_TERMS",
+    "KERNEL_VMEM_BUDGET",
     "AcceleratorModel",
     "pe_luts",
     "array_resources",
@@ -31,7 +33,42 @@ __all__ = [
     "calibrate_latency",
     "adp",
     "pdp",
+    "vmem_budget_bytes",
 ]
+
+# ---------------------------------------------------------------------------
+# Shared device cost terms (TPU execution model)
+# ---------------------------------------------------------------------------
+# One source of truth for the device constants that used to be scattered:
+# benchmarks/roofline.py divides HLO flops/bytes by these peaks, and the
+# kernel-contract verifier (repro.analysis.kernel_contracts) checks Pallas
+# block working sets against the VMEM budget — importing the SAME terms so
+# the roofline and the verifier cannot drift apart.
+DEVICE_TERMS = {
+    "tpu_v5e": {
+        "peak_flops": 197e12,  # bf16 FLOP/s per chip
+        "hbm_bw": 819e9,  # HBM B/s per chip
+        "link_bw": 50e9,  # ICI B/s per link
+        "vmem_bytes": 16 << 20,  # on-chip vector memory per core
+        "hbm_bytes": 16 << 30,  # HBM capacity per chip
+    },
+}
+
+DEFAULT_DEVICE = "tpu_v5e"
+
+# Fraction of VMEM a single Pallas kernel's resident working set may claim:
+# Mosaic needs headroom for double-buffered input windows, semaphores and
+# spill slots, so a kernel budgeted at 100% of VMEM fails to schedule.
+VMEM_BUDGET_FRACTION = 0.75
+
+KERNEL_VMEM_BUDGET = int(
+    VMEM_BUDGET_FRACTION * DEVICE_TERMS[DEFAULT_DEVICE]["vmem_bytes"])
+
+
+def vmem_budget_bytes(device: str = DEFAULT_DEVICE,
+                      fraction: float = VMEM_BUDGET_FRACTION) -> int:
+    """Per-kernel VMEM working-set budget for ``device``."""
+    return int(fraction * DEVICE_TERMS[device]["vmem_bytes"])
 
 # Paper Table III (Ultra96-V2, 8x8 PEs).
 PAPER_TABLE3 = {

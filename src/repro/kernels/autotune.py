@@ -27,8 +27,9 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import threading
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 
@@ -41,6 +42,9 @@ __all__ = [
     "cache_key",
     "cache_path",
     "clear_cache",
+    "parse_cache_key",
+    "validate_cache_entry",
+    "invalid_cache_entries",
     "paged_attn_cache_key",
     "heuristic_paged_blocks",
     "get_paged_blocks",
@@ -165,15 +169,111 @@ def cache_key(path: str, m: int, k: int, n: int) -> str:
 _cache_key = cache_key  # internal alias (pre-registry name)
 
 
+# ---------------------------------------------------------------------------
+# Cache-entry validation (the stale-cache bugfix)
+# ---------------------------------------------------------------------------
+# A hand-edited / corrupted / version-skewed autotune.json used to flow its
+# blocks straight into the kernel wrappers: junk values survived the legality
+# clamp only by accident (non-int types crashed inside pallas_call; a
+# matmul-shaped entry under a paged key silently mistuned the kernel). Every
+# entry is now validated on load against the shape its OWN key encodes —
+# invalid entries are dropped (and remembered, so the kernel-contract
+# verifier can surface them as findings) instead of silently routing a
+# kernel with wrong blocks.
+
+_MATMUL_KEY_RE = re.compile(r"^([A-Za-z0-9_]+):([A-Za-z0-9_]+):(\d+)x(\d+)x(\d+)$")
+_PAGED_KEY_RE = re.compile(
+    r"^([A-Za-z0-9_]+):paged_attn:(\d+)x(\d+)x(\d+)x(\d+)x(\d+)$")
+
+_MATMUL_BLOCK_FIELDS = {"block_m", "block_n", "block_k", "block_k_sub"}
+_PAGED_BLOCK_FIELDS = {"block_h"}
+
+# invalid entries seen by the last _load_cache, as (key, reason) pairs
+_invalid: List[Tuple[str, str]] = []
+
+
+def parse_cache_key(key: str) -> Optional[Dict[str, object]]:
+    """Decompose an on-disk cache key.
+
+    Returns ``{"backend", "path", "shape": (m, k, n)}`` for matmul keys,
+    ``{"backend", "path": "paged_attn", "shape": (slots, len, bs, hd, kv)}``
+    for paged-attention keys, and None for unparseable keys."""
+    m = _PAGED_KEY_RE.match(key)
+    if m:
+        return {"backend": m.group(1), "path": "paged_attn",
+                "shape": tuple(int(g) for g in m.groups()[1:])}
+    m = _MATMUL_KEY_RE.match(key)
+    if m:
+        return {"backend": m.group(1), "path": m.group(2),
+                "shape": (int(m.group(3)), int(m.group(4)), int(m.group(5)))}
+    return None
+
+
+def validate_cache_entry(key: str, blocks) -> Optional[str]:
+    """None when (key, blocks) is a well-formed, legal cache entry; else a
+    human-readable reason. Legality is checked against the shape tuple the
+    key itself encodes, so an entry can never apply blocks tuned (or
+    corrupted) for a different problem."""
+    parsed = parse_cache_key(key)
+    if parsed is None:
+        return "unparseable key (expected backend:path:MxKxN or paged form)"
+    if not isinstance(blocks, dict) or not blocks:
+        return "entry is not a non-empty block dict"
+    fields = (_PAGED_BLOCK_FIELDS if parsed["path"] == "paged_attn"
+              else _MATMUL_BLOCK_FIELDS)
+    unknown = set(blocks) - fields
+    if unknown:
+        return f"unknown block field(s) for path {parsed['path']!r}: {sorted(unknown)}"
+    for f, v in blocks.items():
+        if isinstance(v, bool) or not isinstance(v, int) or v < 1:
+            return f"{f}={v!r} is not a positive int"
+    shape = parsed["shape"]
+    if parsed["path"] == "paged_attn":
+        kv_heads = shape[4]
+        bh = blocks.get("block_h", 1)
+        if bh > kv_heads or kv_heads % bh:
+            return f"block_h={bh} does not divide kv_heads={kv_heads}"
+        return None
+    m_, k_, n_ = shape
+    bl = {**DEFAULT_BLOCKS, **{f: v for f, v in blocks.items() if f != "block_k_sub"}}
+    clamped = _clamp(m_, k_, n_, bl)
+    drift = {f: (bl[f], clamped[f]) for f in ("block_m", "block_n", "block_k")
+             if f in blocks and clamped[f] != blocks[f]}
+    if drift:
+        return f"blocks illegal for shape {m_}x{k_}x{n_}: {drift}"
+    sub = blocks.get("block_k_sub")
+    if sub is not None and bl["block_k"] % sub:
+        return f"block_k_sub={sub} does not divide block_k={bl['block_k']}"
+    return None
+
+
+def invalid_cache_entries() -> List[Tuple[str, str]]:
+    """(key, reason) for every on-disk entry the last load rejected — the
+    kernel-contract verifier reports these as findings."""
+    _load_cache()
+    with _cache_lock:
+        return list(_invalid)
+
+
 def _load_cache() -> Dict[str, Dict[str, int]]:
     global _cache
     with _cache_lock:
         if _cache is None:
+            _invalid.clear()
             try:
                 with open(cache_path()) as fh:
-                    _cache = {k_: dict(v) for k_, v in json.load(fh).items()}
+                    raw = json.load(fh)
             except (OSError, ValueError):
-                _cache = {}
+                raw = {}
+            if not isinstance(raw, dict):
+                raw = {}
+            _cache = {}
+            for k_, v in raw.items():
+                reason = validate_cache_entry(k_, v)
+                if reason is None:
+                    _cache[k_] = dict(v)
+                else:
+                    _invalid.append((k_, reason))
         return _cache
 
 

@@ -45,7 +45,7 @@ from repro.distributed.sharding import (
     param_shardings,
     zero1_shardings,
 )
-from repro.launch.hlo_analysis import analyze_hlo
+from repro.analysis.hlo_audit import analyze_hlo
 from repro.launch.mesh import make_production_mesh
 from repro.models import build_model
 from repro.nn.module import unbox
@@ -270,7 +270,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, mode: str = "b
         hlo = compiled.as_text()
         rec["collectives"] = parse_collectives(hlo)
         # trip-count-aware static model (cost_analysis counts while bodies
-        # once; see launch/hlo_analysis.py) — the roofline reads `static`.
+        # once; see analysis/hlo_audit.py) — the roofline reads `static`.
         static = analyze_hlo(hlo, mesh.size)
         rec["static"] = {
             "flops": static["flops"],
@@ -294,7 +294,7 @@ def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, *, mode: str = "b
         os.makedirs(out_dir, exist_ok=True)
         path = os.path.join(out_dir, f"{arch}__{shape_name}__{mode}.json")
         with open(path, "w") as f:
-            json.dump(rec, f, indent=1)
+            json.dump(rec, f, indent=1, sort_keys=True)
     return rec
 
 

@@ -277,7 +277,7 @@ class MetricsRegistry:
 
     def write_json(self, path: str) -> None:
         with open(path, "w") as fh:
-            json.dump(self.snapshot(), fh, indent=2)
+            json.dump(self.snapshot(), fh, indent=2, sort_keys=True)
 
     def write_prometheus(self, path: str) -> None:
         with open(path, "w") as fh:

@@ -167,23 +167,23 @@ class Tracer:
         """Header meta + one record per line + optional footer meta carrying
         the run's metrics summary / per-request dump for reconciliation."""
         with open(path, "w") as fh:
-            fh.write(json.dumps(self.header()) + "\n")
+            fh.write(json.dumps(self.header(), sort_keys=True) + "\n")
             for rec in self._buf:
-                fh.write(json.dumps(rec.to_json()) + "\n")
+                fh.write(json.dumps(rec.to_json(), sort_keys=True) + "\n")
             if summary is not None or requests is not None:
                 footer: Dict[str, Any] = {"kind": "meta", "footer": True}
                 if summary is not None:
                     footer["summary"] = summary
                 if requests is not None:
                     footer["requests"] = requests
-                fh.write(json.dumps(footer) + "\n")
+                fh.write(json.dumps(footer, sort_keys=True) + "\n")
 
     def to_perfetto(self) -> Dict[str, Any]:
         return records_to_perfetto(self._buf)
 
     def write_perfetto(self, path: str) -> None:
         with open(path, "w") as fh:
-            json.dump(self.to_perfetto(), fh)
+            json.dump(self.to_perfetto(), fh, sort_keys=True)
 
 
 class _NullSpanCtx:

@@ -264,6 +264,8 @@ class ServeEngine:
         n_steps = max(1, min(n_steps, self.max_len - s + 1))
         need = np.array([r.max_new_tokens for r in reqs])
         eos = np.array([-1 if r.eos_id is None else r.eos_id for r in reqs])
+        # repro: noqa-RPA001 -- streaming emits host token ids; one sync
+        # per step is the engine's contract (tests assert callback order)
         cur = np.asarray(tok)[:, 0]
         outs = [cur]
         finished = (cur == eos) | (need <= 1)
@@ -275,7 +277,7 @@ class ServeEngine:
             with self._mesh_ctx():
                 logits, cache = self._decode(self.params, tok, cache, pos)
             tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-            cur = np.asarray(tok)[:, 0]
+            cur = np.asarray(tok)[:, 0]  # repro: noqa-RPA001 -- see above
             self._stream(reqs, cur, finished, t, need)
             outs.append(cur)
             finished = finished | (cur == eos) | (t + 1 >= need)

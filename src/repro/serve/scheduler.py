@@ -209,6 +209,8 @@ class SlotScheduler:
             nxt, self.kv.cache = self._tick_fn(
                 self.params, self.kv.cache, jnp.asarray(self._tok), jnp.asarray(self._pos)
             )
+        # repro: noqa-RPA001 -- the tick barrier: emitted tokens must reach
+        # the host to route into per-request queues / detect EOS
         return np.asarray(nxt)
 
     def _build_tick(self):
@@ -318,6 +320,7 @@ class SlotScheduler:
         rm.t_admit = self.clock()
         logits, pcache = self.prefill(self.params, req.prompt)
         self.metrics.prefills += 1
+        # repro: noqa-RPA001 -- admission emits the prefill token to the host
         t0 = int(np.argmax(np.asarray(logits)[0, -1]))
         plen = rm.prompt_len
         # decode writes go to plen .. plen+n-2; keep them inside the cache
@@ -513,6 +516,7 @@ class PagedSlotScheduler(SlotScheduler):
                 self.params, self.kv.cache, jnp.asarray(self._tok),
                 jnp.asarray(self._pos), jnp.asarray(self.kv.tables),
             )
+        # repro: noqa-RPA001 -- tick barrier (see SlotScheduler._run_tick)
         return np.asarray(nxt)
 
     def _build_tick(self):
@@ -570,6 +574,7 @@ class PagedSlotScheduler(SlotScheduler):
         # publish this prompt's full blocks before any chance of freeing, so
         # even an instant-EOS request seeds the prefix cache
         self.kv.register_prompt(slot, req.prompt)
+        # repro: noqa-RPA001 -- admission emits the prefill token to the host
         t0 = int(np.argmax(np.asarray(logits)[0, -1]))
         st = _SlotState(req=req, remaining=budget, emitted=[])
         done = self._emit(st, t0)

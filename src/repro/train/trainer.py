@@ -169,6 +169,8 @@ class Trainer:
                 if (step + 1) % self.cfg.log_every == 0 or step == start_step:
                     m = {k: float(v) for k, v in metrics.items()}
                     m["step"] = step
+                    # repro: noqa-RPA005 -- float(v) above blocked on the
+                    # step's metrics, so the wall clock is already synced
                     m["wall_s"] = time.time() - t0
                     self.metrics_log.append(m)
                 if self.ckpt and (step + 1) % self.cfg.ckpt_every == 0:

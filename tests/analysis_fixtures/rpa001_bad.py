@@ -1,0 +1,14 @@
+"""Seeded RPA001 violations: host syncs inside jit-traced code.
+
+Golden positive fixture for tests/test_analysis.py — every flagged line
+below must produce exactly an RPA001 finding.
+"""
+import jax
+import numpy as np
+
+
+@jax.jit
+def traced_sync(x):
+    v = float(x)  # RPA001: float() on a tracer
+    arr = np.asarray(x)  # RPA001: device -> host copy per call
+    return v + arr.item()  # RPA001: .item() forces a sync

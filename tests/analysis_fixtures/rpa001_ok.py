@@ -1,0 +1,23 @@
+"""RPA001-clean twin: literal conversions and justified suppressions.
+
+Golden negative fixture — the lint pass must report nothing here.
+"""
+import jax
+import numpy as np
+
+
+@jax.jit
+def literal_ok(x):
+    # np.array over a Python literal never touches a device buffer
+    lengths = np.array([1, 2, 3])
+    return x + lengths.sum()
+
+
+@jax.jit
+def suppressed(x):
+    # the emitted value is this function's contract: callers consume one
+    # host float per call, not one per element
+    # repro: noqa-RPA001 -- host handoff is the contract
+    v = float(x)
+    y = np.asarray(x)  # repro: noqa-RPA001 -- see above
+    return v + y

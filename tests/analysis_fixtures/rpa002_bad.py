@@ -1,0 +1,9 @@
+"""Seeded RPA002 violation: a fresh jit callable per loop iteration."""
+import jax
+
+
+def rebuild_per_iter(f, xs):
+    outs = []
+    for x in xs:
+        outs.append(jax.jit(f)(x))  # RPA002: new cache entry every pass
+    return outs

@@ -1,0 +1,10 @@
+"""RPA002-clean twin: the jitted callable is built once, outside the loop."""
+import jax
+
+
+def build_once(f, xs):
+    jf = jax.jit(f)
+    outs = []
+    for x in xs:
+        outs.append(jf(x))
+    return outs

@@ -1,0 +1,10 @@
+"""Seeded RPA003 violation: Python branch on a traced (jnp) value."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branch_on_tracer(x):
+    if jnp.any(x > 0):  # RPA003: tracer has no Python truth value
+        return x
+    return -x

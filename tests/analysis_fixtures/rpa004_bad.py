@@ -1,0 +1,10 @@
+"""Seeded RPA004 violations: dict-order-dependent keys and artifacts."""
+import json
+
+
+def unstable_key(d):
+    return tuple(d.items())  # RPA004: insertion order leaks into the key
+
+
+def unstable_dump(d, fh):
+    json.dump(d, fh)  # RPA004: no sort_keys=True

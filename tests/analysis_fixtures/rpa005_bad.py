@@ -1,0 +1,12 @@
+"""Seeded RPA005 violation: a timed region launching JAX work with no
+block_until_ready — the timer measures async dispatch, not execution."""
+import time
+
+import jax.numpy as jnp
+
+
+def time_dispatch(x):
+    t0 = time.perf_counter()
+    y = jnp.dot(x, x)
+    t1 = time.perf_counter()  # RPA005 fires on the second timer call
+    return y, t1 - t0

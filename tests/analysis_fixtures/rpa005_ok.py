@@ -1,0 +1,12 @@
+"""RPA005-clean twin: the timed region blocks on the device result."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def time_execution(x):
+    t0 = time.perf_counter()
+    y = jax.block_until_ready(jnp.dot(x, x))
+    t1 = time.perf_counter()
+    return y, t1 - t0

@@ -75,7 +75,7 @@ def test_zero1_adds_data_axis_once():
 
 
 def test_hlo_analyzer_scan_equals_unrolled():
-    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.analysis.hlo_audit import analyze_hlo
 
     x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
     w = jax.ShapeDtypeStruct((4, 128, 128), jnp.float32)
