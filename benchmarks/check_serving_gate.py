@@ -25,6 +25,14 @@ Fails (exit 1) when, for any benched mode:
   ``--min-int8-capacity`` (fp32/int8 pool bytes-per-token) gate the wins
   that are stable on any host.
 
+Speculative-decoding bounds (when set) check the top-level ``speculative``
+A/B row: ``--min-spec-accept-rate`` and ``--min-spec-tokens-per-round``
+gate the host-stable mechanism figures (the accept rule runs on the host —
+no emulator distortion), while ``--min-spec-tpot-ratio`` floors the
+baseline/spec TPOT ratio as an emulator-relative wall-clock backstop (same
+caveat as the fused-route TPOT floor above: set below the measured
+emulator ratio to catch pathological regressions, not to claim speedups).
+
 TTFT improvement on the shared-prefix workload is reported but warn-only:
 wall-clock latency on shared CI runners is too noisy to hard-gate.
 """
@@ -37,7 +45,9 @@ import sys
 
 def check(payload: dict, *, min_ratio: float, max_paged_loss: float,
           min_fused_tpot_ratio: float = 0.0, min_int8_capacity: float = 0.0,
-          min_fused_hbm_ratio: float = 0.0) -> int:
+          min_fused_hbm_ratio: float = 0.0, min_spec_accept_rate: float = 0.0,
+          min_spec_tokens_per_round: float = 0.0,
+          min_spec_tpot_ratio: float = 0.0) -> int:
     failures = []
     results = payload.get("results", {})
     if not results:
@@ -130,6 +140,40 @@ def check(payload: dict, *, min_ratio: float, max_paged_loss: float,
             else:
                 print(f"[{mode}] int8 context-per-byte {cap:.2f}x >= "
                       f"{min_int8_capacity}x")
+    spec_bounds = (min_spec_accept_rate > 0 or min_spec_tokens_per_round > 0
+                   or min_spec_tpot_ratio > 0)
+    spec = payload.get("speculative")
+    if spec_bounds and not spec:
+        failures.append("payload has no speculative A/B row")
+    if spec and spec_bounds:
+        tag = f"[spec {spec.get('target_mode')}<-{spec.get('draft')} k={spec.get('spec_k')}]"
+        if min_spec_accept_rate > 0:
+            ar = spec.get("accept_rate") or 0.0
+            if ar < min_spec_accept_rate:
+                failures.append(f"{tag} accept rate {ar:.2f} < "
+                                f"{min_spec_accept_rate} (draft stopped "
+                                f"tracking the target)")
+            else:
+                print(f"{tag} accept rate {ar:.2f} >= {min_spec_accept_rate}")
+        if min_spec_tokens_per_round > 0:
+            tpr = spec.get("tokens_per_round") or 0.0
+            if tpr < min_spec_tokens_per_round:
+                failures.append(f"{tag} emitted tokens/round {tpr:.2f} < "
+                                f"{min_spec_tokens_per_round}")
+            else:
+                print(f"{tag} emitted tokens/round {tpr:.2f} >= "
+                      f"{min_spec_tokens_per_round}")
+        if min_spec_tpot_ratio > 0:
+            tr = spec.get("tpot_ratio_base_over_spec")
+            if tr is None:
+                failures.append(f"{tag} missing tpot ratio")
+            elif tr < min_spec_tpot_ratio:
+                failures.append(f"{tag} baseline/spec TPOT {tr:.2f}x < "
+                                f"{min_spec_tpot_ratio}x (speculation got "
+                                f"pathologically slower than target-only)")
+            else:
+                print(f"{tag} baseline/spec TPOT {tr:.2f}x >= "
+                      f"{min_spec_tpot_ratio}x")
     for f in failures:
         print(f"GATE FAIL: {f}", file=sys.stderr)
     return 1 if failures else 0
@@ -151,13 +195,26 @@ def main(argv=None) -> int:
     ap.add_argument("--min-fused-hbm-ratio", type=float, default=0.0,
                     help="long-decode gate: minimum modeled gather/fused "
                          "decode HBM-bytes-per-token ratio (0 = skip)")
+    ap.add_argument("--min-spec-accept-rate", type=float, default=0.0,
+                    help="speculative gate: minimum draft-proposal accept "
+                         "rate, host-stable (0 = skip)")
+    ap.add_argument("--min-spec-tokens-per-round", type=float, default=0.0,
+                    help="speculative gate: minimum emitted tokens per "
+                         "(row, round), host-stable (0 = skip)")
+    ap.add_argument("--min-spec-tpot-ratio", type=float, default=0.0,
+                    help="speculative gate: minimum baseline/spec TPOT "
+                         "ratio — emulator-relative wall-clock backstop "
+                         "(0 = skip)")
     args = ap.parse_args(argv)
     with open(args.bench_json) as fh:
         payload = json.load(fh)
     rc = check(payload, min_ratio=args.min_ratio, max_paged_loss=args.max_paged_loss,
                min_fused_tpot_ratio=args.min_fused_tpot_ratio,
                min_int8_capacity=args.min_int8_capacity,
-               min_fused_hbm_ratio=args.min_fused_hbm_ratio)
+               min_fused_hbm_ratio=args.min_fused_hbm_ratio,
+               min_spec_accept_rate=args.min_spec_accept_rate,
+               min_spec_tokens_per_round=args.min_spec_tokens_per_round,
+               min_spec_tpot_ratio=args.min_spec_tpot_ratio)
     print("serving gate:", "FAIL" if rc else "PASS")
     return rc
 

@@ -1,0 +1,81 @@
+"""Run the README quickstart blocks — the CI ``docs`` job's smoke.
+
+Extracts every fenced ``bash`` block in README.md that is immediately
+preceded by a ``<!-- ci-quickstart -->`` marker and executes it from the
+repo root with ``bash -euo pipefail``. The marker is the opt-in: README
+code that is illustrative rather than runnable simply omits it. Exit code
+is nonzero on the first failing block, so a README whose quickstart has
+rotted fails CI instead of failing the first reader.
+
+    python benchmarks/run_readme_quickstart.py [--readme README.md] [--list]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+from typing import List, Tuple
+
+MARKER = "<!-- ci-quickstart -->"
+
+
+def extract_blocks(text: str) -> List[Tuple[int, str]]:
+    """(first line number, script) for each marked fenced bash block."""
+    lines = text.splitlines()
+    blocks = []
+    i = 0
+    while i < len(lines):
+        if lines[i].strip() == MARKER:
+            j = i + 1
+            while j < len(lines) and not lines[j].strip():
+                j += 1
+            if j < len(lines) and re.match(r"^```(bash|sh)\s*$", lines[j].strip()):
+                body = []
+                k = j + 1
+                while k < len(lines) and lines[k].strip() != "```":
+                    body.append(lines[k])
+                    k += 1
+                blocks.append((j + 2, "\n".join(body)))
+                i = k
+        i += 1
+    return blocks
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--readme", default="README.md")
+    ap.add_argument("--list", action="store_true",
+                    help="print the blocks without running them")
+    args = ap.parse_args(argv)
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    readme = os.path.join(root, args.readme) \
+        if not os.path.isabs(args.readme) else args.readme
+    with open(readme, encoding="utf-8") as fh:
+        blocks = extract_blocks(fh.read())
+    if not blocks:
+        print(f"ERROR: no {MARKER!r} bash blocks found in {readme}",
+              file=sys.stderr)
+        return 1
+    print(f"[quickstart] {len(blocks)} marked blocks in {args.readme}")
+    if args.list:
+        for lineno, script in blocks:
+            print(f"--- line {lineno} ---\n{script}")
+        return 0
+    for n, (lineno, script) in enumerate(blocks, 1):
+        print(f"[quickstart] block {n}/{len(blocks)} (README.md:{lineno}):")
+        print("\n".join(f"    {ln}" for ln in script.splitlines()))
+        r = subprocess.run(["bash", "-euo", "pipefail", "-c", script],
+                           cwd=root)
+        if r.returncode != 0:
+            print(f"[quickstart] block {n} (README.md:{lineno}) FAILED "
+                  f"(exit {r.returncode})", file=sys.stderr)
+            return r.returncode
+    print(f"[quickstart] all {len(blocks)} blocks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

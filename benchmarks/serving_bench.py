@@ -182,13 +182,22 @@ def run_static(api, params, arch, workload, *, batch_size: int, max_len: int,
 
 def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
                    warmup: bool, mesh=None, engine: str = "continuous",
-                   block_size: int = 8, chunk: int = 16) -> Dict:
+                   block_size: int = 8, chunk: int = 16, from_train=None,
+                   spec_draft=None, spec_k: int = 1) -> Dict:
     # per-row registry: the run's labelled histograms/counters + serve_run_*
     # gauges ride along in the row as a JSON snapshot (schema_version 2)
     registry = MetricsRegistry()
-    eng = ServeEngine(api, params, arch, max_len=max_len, engine=engine,
-                      n_slots=n_slots, kv_block_size=block_size,
-                      prefill_chunk=chunk, mesh=mesh, registry=registry)
+    kw = dict(max_len=max_len, engine=engine, n_slots=n_slots,
+              kv_block_size=block_size, prefill_chunk=chunk, mesh=mesh,
+              registry=registry)
+    if from_train is not None:
+        # speculative rows convert the SAME trained tree into target and
+        # draft serve forms (serve/spec.py) — so both engines of an A/B see
+        # identical target weights
+        eng = ServeEngine.from_trained(from_train, arch, spec_draft=spec_draft,
+                                       spec_k=spec_k, **kw)
+    else:
+        eng = ServeEngine(api, params, arch, **kw)
     sched = eng.scheduler
     if warmup:
         _warmup(eng, arch.vocab)
@@ -225,7 +234,46 @@ def run_continuous(api, params, arch, workload, *, n_slots: int, max_len: int,
     out["sched_tpot_p95_s"] = sm["tpot_p95_s"]
     out["sched_queue_wait_mean_s"] = sm["queue_wait_mean_s"]
     out["sched_prefill_mean_s"] = sm["prefill_mean_s"]
+    if spec_draft is not None and spec_k > 1:
+        out["spec_rounds"] = sm["spec_rounds"]
+        out["spec_accept_rate"] = sm["spec_accept_rate"]
+        out["spec_tokens_per_round"] = sm["spec_tokens_per_round"]
     out["registry"] = registry.snapshot()
+    return out
+
+
+def run_speculative(args) -> Dict:
+    """Speculative decoding A/B (DESIGN.md §10): a dense target served
+    target-only vs speculating with a registry-native quantized draft of its
+    OWN trained weights, on an identical decode-heavy paged trace. The wall
+    clock ratio is emulator-relative on CPU (interpret-mode kernels distort
+    absolute time — PR-6 precedent); the accept rate and emitted tokens per
+    round are the host-stable mechanism figures the CI gate leans on."""
+    arch = get_smoke(args.arch, compute_mode="dense", remat=False)
+    tparams = unbox(build_model(arch, phase="train").init(jax.random.PRNGKey(0)))
+    mk = lambda: make_workload(
+        np.random.RandomState(args.seed + 3), max(8, args.requests // 2),
+        arch.vocab, arrival_rate=args.arrival_rate, plen_range=(3, 8),
+        ntok_range=(16, 24),
+    )
+    common = dict(n_slots=args.n_slots, max_len=args.max_len,
+                  warmup=not args.no_warmup, engine="paged",
+                  block_size=args.kv_block_size, chunk=args.prefill_chunk,
+                  from_train=tparams)
+    base = run_continuous(None, None, arch, mk(), **common)
+    spec = run_continuous(None, None, arch, mk(), spec_draft=args.spec_draft,
+                          spec_k=args.spec_k, **common)
+    ratio = (base["tpot_mean_s"] / spec["tpot_mean_s"]
+             if spec["tpot_mean_s"] else None)
+    out = {"target_mode": "dense", "draft": args.spec_draft,
+           "spec_k": args.spec_k, "baseline": base, "speculative": spec,
+           "tpot_ratio_base_over_spec": ratio,
+           "accept_rate": spec["spec_accept_rate"],
+           "tokens_per_round": spec["spec_tokens_per_round"]}
+    print(f"[speculative] dense <- {args.spec_draft} k={args.spec_k}: tpot "
+          f"{base['tpot_mean_s']:.4f}s -> {spec['tpot_mean_s']:.4f}s "
+          f"({ratio:.2f}x) | accept {out['accept_rate']:.2f} | "
+          f"{out['tokens_per_round']:.2f} tok/round")
     return out
 
 
@@ -427,6 +475,13 @@ def main(argv=None) -> int:
     ap.add_argument("--long-max-len", type=int, default=256,
                     help="long-decode workload: paged max_len (decode-heavy "
                          "fused-vs-gather TPOT A/B)")
+    ap.add_argument("--spec-draft", default="qnn8",
+                    choices=("dense", "bnn", "qnn8", "small"),
+                    help="speculative A/B row: draft preset for the dense "
+                         "target (serve/spec.py)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative A/B row: verify window width "
+                         "(0 disables the row)")
     ap.add_argument("--no-warmup", action="store_true")
     ap.add_argument("--tp", type=int, default=0,
                     help="run the continuous engine tensor-parallel on a "
@@ -450,6 +505,9 @@ def main(argv=None) -> int:
         print(f"[serving_bench] mesh {dict(mesh.shape)}")
 
     results = {m: bench_mode(m, args, mesh=mesh) for m in args.modes.split(",")}
+    speculative = None
+    if mesh is None and args.spec_k > 1:
+        speculative = run_speculative(args)
     multi = None
     if mesh is None and not args.no_multi_device:
         multi = multi_device_row(args)
@@ -480,6 +538,7 @@ def main(argv=None) -> int:
                                          "prefill_chunk": args.prefill_chunk,
                                          "sys_prompt_len": args.sys_prompt}},
         "max_len": args.max_len,
+        "speculative": speculative,
         "tp": args.tp or None,
         "multi_device": (
             {"forced_host_devices": 8, "mesh": {"data": 4, "model": 2},

@@ -45,6 +45,8 @@ def main(argv=None) -> int:
     ap.add_argument("--contracts", action="store_true",
                     help="kernel contract verifier")
     ap.add_argument("--hlo", action="store_true", help="HLO/collective audit")
+    ap.add_argument("--docs", action="store_true",
+                    help="docs link/anchor checker (DOC0xx)")
     ap.add_argument("--root", default=".",
                     help="repo root for the lint pass (default: cwd)")
     ap.add_argument("--paths", nargs="*", default=None,
@@ -55,7 +57,8 @@ def main(argv=None) -> int:
                     help="suppress the human rendering; exit code only")
     args = ap.parse_args(argv)
 
-    want_all = args.all or not (args.lints or args.contracts or args.hlo)
+    want_all = args.all or not (args.lints or args.contracts or args.hlo
+                                or args.docs)
     rep = Report()
     if want_all or args.lints:
         from . import lints
@@ -69,6 +72,10 @@ def main(argv=None) -> int:
         from . import hlo_audit
 
         rep.extend(hlo_audit.run())
+    if want_all or args.docs:
+        from . import docs_lint
+
+        rep.extend(docs_lint.run(args.root))
 
     if args.json_out:
         rep.write_json(args.json_out)

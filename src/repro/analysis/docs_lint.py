@@ -1,0 +1,154 @@
+"""Docs link/anchor checker — the fourth analysis pass (DOC0xx).
+
+Walks the repo's markdown documentation layer (README.md, DESIGN.md,
+ROADMAP.md, docs/*.md) and verifies every internal reference actually
+resolves, so the docs cannot silently rot as files move:
+
+- **DOC001** — a relative markdown link ``[text](path)`` whose target file
+  does not exist (external ``http(s)``/``mailto`` links are skipped: CI
+  must not depend on the network).
+- **DOC002** — a ``[text](file#anchor)`` / ``[text](#anchor)`` reference
+  whose anchor matches no heading in the target file (GitHub heading
+  slugging: lowercase, punctuation stripped, spaces to hyphens).
+- **DOC003** — a ``DESIGN.md §N`` section reference (the repo's idiom for
+  pointing into the design doc) with no ``§N`` heading in DESIGN.md.
+
+Pure stdlib, same Finding/Report contract as the other passes; wired into
+``python -m repro.analysis`` as ``--docs`` and part of ``--all`` (the CI
+``docs`` job runs it next to the README quickstart smoke).
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Dict, List
+
+from .report import Finding, Report
+
+__all__ = ["run"]
+
+PASS = "docs_lint"
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+_SECTION_REF_RE = re.compile(r"DESIGN\.md\s+§(\d+)")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub's heading -> anchor slug: lowercase, drop everything but word
+    characters/spaces/hyphens, spaces to hyphens."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)
+    h = re.sub(r"[^\w\s§-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def _doc_files(root: str) -> List[str]:
+    out = []
+    for name in ("README.md", "DESIGN.md", "ROADMAP.md"):
+        p = os.path.join(root, name)
+        if os.path.isfile(p):
+            out.append(p)
+    docs = os.path.join(root, "docs")
+    if os.path.isdir(docs):
+        out.extend(sorted(
+            os.path.join(docs, f) for f in os.listdir(docs) if f.endswith(".md")
+        ))
+    return out
+
+
+def _non_fenced_lines(text: str):
+    """(lineno, line) pairs outside fenced code blocks — links inside
+    example code are illustrative, not contracts."""
+    fenced = False
+    for i, line in enumerate(text.splitlines(), 1):
+        if _FENCE_RE.match(line.strip()):
+            fenced = not fenced
+            continue
+        if not fenced:
+            yield i, line
+
+
+def _anchors(path: str, cache: Dict[str, set]) -> set:
+    if path not in cache:
+        slugs = set()
+        try:
+            with open(path, encoding="utf-8") as fh:
+                text = fh.read()
+        except OSError:
+            text = ""
+        for _, line in _non_fenced_lines(text):
+            m = _HEADING_RE.match(line)
+            if m:
+                slugs.add(_slug(m.group(2)))
+        cache[path] = slugs
+    return cache[path]
+
+
+def run(root: str = ".") -> Report:
+    rep = Report()
+    rep.passes_run.append(PASS)
+    anchor_cache: Dict[str, set] = {}
+    files = _doc_files(root)
+    design = os.path.join(root, "DESIGN.md")
+    design_sections = set()
+    if os.path.isfile(design):
+        with open(design, encoding="utf-8") as fh:
+            for _, line in _non_fenced_lines(fh.read()):
+                m = _HEADING_RE.match(line)
+                if m:
+                    sm = re.match(r"§(\d+)", m.group(2).strip())
+                    if sm:
+                        design_sections.add(int(sm.group(1)))
+
+    n_links = 0
+    for path in files:
+        rel = os.path.relpath(path, root)
+        base = os.path.dirname(path)
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        for lineno, line in _non_fenced_lines(text):
+            for m in _LINK_RE.finditer(line):
+                target = m.group(1)
+                if re.match(r"^[a-z][a-z0-9+.-]*:", target):  # http:, mailto:
+                    continue
+                n_links += 1
+                frag = None
+                if "#" in target:
+                    target, frag = target.split("#", 1)
+                tpath = path if not target else os.path.normpath(
+                    os.path.join(base, target))
+                if target and not os.path.exists(tpath):
+                    rep.add(Finding(
+                        pass_name=PASS, code="DOC001",
+                        where=f"{rel}:{lineno}", line=lineno,
+                        message=f"broken link: {m.group(1)!r} "
+                                f"(no such file {os.path.relpath(tpath, root)!r})",
+                        hint="fix the relative path or delete the link",
+                    ))
+                    continue
+                if frag is not None and tpath.endswith(".md"):
+                    if _slug(frag) not in _anchors(tpath, anchor_cache):
+                        rep.add(Finding(
+                            pass_name=PASS, code="DOC002",
+                            where=f"{rel}:{lineno}", line=lineno,
+                            message=f"broken anchor: {m.group(1)!r} matches "
+                                    f"no heading in "
+                                    f"{os.path.relpath(tpath, root)!r}",
+                            hint="anchors are GitHub heading slugs "
+                                 "(lowercase, spaces -> hyphens)",
+                        ))
+            for m in _SECTION_REF_RE.finditer(line):
+                n_links += 1
+                if int(m.group(1)) not in design_sections:
+                    rep.add(Finding(
+                        pass_name=PASS, code="DOC003",
+                        where=f"{rel}:{lineno}", line=lineno,
+                        message=f"reference to DESIGN.md §{m.group(1)} but "
+                                f"DESIGN.md has no such section",
+                        hint="add the section or fix the reference",
+                    ))
+    rep.data[PASS] = {"files_checked": [os.path.relpath(p, root) for p in files],
+                      "references_checked": n_links}
+    return rep

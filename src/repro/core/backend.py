@@ -7,6 +7,11 @@ XNOR-popcount) and qnn8 (8-bit integer) — implements one contract:
     init_train / init_serve   parameter trees for the two phases
     apply_train / apply_serve the float-latent and hardware-form forwards
     to_serve                  trained float params -> hardware form
+    train_param_keys          (required, optional) key sets naming this
+                              backend's training leaves — how whole-tree
+                              converters (convert.tree_to_serve, the
+                              speculative-draft builder in serve/spec.py)
+                              recognize a linear leaf inside any model tree
     kernel_route              name of the Pallas route in kernels/ops.py
                               (resolvable via ops.kernel_route), or None
                               for XLA-only paths
@@ -27,6 +32,13 @@ contraction, ReLU for the arithmetic ones).
 The registry deliberately knows nothing about jax.nn modules: specs are
 duck-typed (any object with LinearSpec's fields works) and params are
 ``nn.module.P`` boxes so sharding axes ride along.
+
+Because dense, bnn and qnn8 all train a plain ``(K, N)`` matmul weight
+``w``, one trained checkpoint deploys as ANY of those serve forms — which
+is what makes the registry a speculative-decoding draft factory
+(serve/spec.py): the cheap backend is the draft, the expensive one the
+target, same weights. bika trains an ``(m, K, N)`` threshold tensor
+instead and only inter-converts with itself.
 """
 from __future__ import annotations
 

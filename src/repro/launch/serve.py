@@ -89,6 +89,16 @@ def main(argv=None) -> int:
                     choices=("fused", "gather"),
                     help="paged attention: fused block-table kernel (default) "
                          "or the XLA gather oracle")
+    ap.add_argument("--spec-draft", default="",
+                    choices=("", "dense", "bika", "bnn", "qnn8", "small"),
+                    help="speculative decoding: draft preset built from the "
+                         "SAME trained weights (registry backend or 'small' "
+                         "= half-depth dense). Empty = off. Greedy outputs "
+                         "stay token-for-token identical to target-only")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="speculative window: draft proposes k-1 tokens, the "
+                         "target verifies all k in one step (k=1 degenerates "
+                         "to normal decode)")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="Poisson arrival rate in req/s (0 = submit all up front)")
     ap.add_argument("--tp", type=int, default=0,
@@ -122,19 +132,31 @@ def main(argv=None) -> int:
         arch = arch.replace(pack_signs=True)
     if args.paged_attn_route != arch.paged_attn_route:
         arch = arch.replace(paged_attn_route=args.paged_attn_route)
-    api = build_model(arch, phase="serve")
-    params = unbox(api.init(jax.random.PRNGKey(0)))
-    print(f"[serve] {arch.name} mode={args.mode} params={param_bytes(params):,} B")
-
-    eng = ServeEngine(api, params, arch, batch_size=args.batch_size,
-                      max_len=args.max_len, quantized_kv=args.quantized_kv,
-                      engine=args.engine, n_slots=args.n_slots or None,
-                      kv_block_size=args.kv_block_size,
-                      kv_n_blocks=args.kv_n_blocks or None,
-                      prefix_cache=args.prefix_cache,
-                      prefill_chunk=args.prefill_chunk, mesh=mesh,
-                      tracer=tracer, registry=registry,
-                      profile_sample=args.profile_sample)
+    eng_kw = dict(batch_size=args.batch_size,
+                  max_len=args.max_len, quantized_kv=args.quantized_kv,
+                  engine=args.engine, n_slots=args.n_slots or None,
+                  kv_block_size=args.kv_block_size,
+                  kv_n_blocks=args.kv_n_blocks or None,
+                  prefix_cache=args.prefix_cache,
+                  prefill_chunk=args.prefill_chunk, mesh=mesh,
+                  tracer=tracer, registry=registry,
+                  profile_sample=args.profile_sample)
+    if args.spec_draft:
+        # speculative decoding needs the trained float tree so the SAME
+        # weights can be converted through both the target backend and the
+        # cheaper draft backend (serve/spec.py)
+        tparams = unbox(build_model(arch, phase="train").init(jax.random.PRNGKey(0)))
+        print(f"[serve] {arch.name} mode={args.mode} "
+              f"params={param_bytes(tparams):,} B "
+              f"spec: draft={args.spec_draft} k={args.spec_k}")
+        eng = ServeEngine.from_trained(tparams, arch, spec_draft=args.spec_draft,
+                                       spec_k=args.spec_k, **eng_kw)
+    else:
+        api = build_model(arch, phase="serve")
+        params = unbox(api.init(jax.random.PRNGKey(0)))
+        print(f"[serve] {arch.name} mode={args.mode} "
+              f"params={param_bytes(params):,} B")
+        eng = ServeEngine(api, params, arch, **eng_kw)
     mesh_note = (f" mesh={dict(mesh.shape)}" if mesh is not None else "")
     print(f"[serve] engine={eng.engine}{mesh_note}")
     rng = np.random.RandomState(0)
@@ -179,6 +201,10 @@ def main(argv=None) -> int:
               f"({m['kv_bytes_per_token']:.0f} B/token) "
               f"in-use peak={m['kv_bytes_in_use_peak']:,} B "
               f"decode HBM/token={m['decode_hbm_bytes_per_token']:.0f} B")
+        if m.get("spec_rounds"):
+            print(f"[serve] spec: rounds={m['spec_rounds']} "
+                  f"accept rate={m['spec_accept_rate']:.2f} "
+                  f"tokens/round={m['spec_tokens_per_round']:.2f}")
     if eng.profiler is not None and eng.profiler.sampled_ticks:
         ps = eng.profiler.summary()
         split = " ".join(f"{k}={v['fraction']:.0%}"

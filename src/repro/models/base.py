@@ -190,6 +190,13 @@ class ModelAPI(NamedTuple):
     # (params, chunk (1,C), pool, table (1,T), start (1,), last_in_chunk (1,))
     # -> (last-token logits (1,1,V), pool)
     prefill_chunk: Optional[Callable[..., Any]] = None
+    # speculative decoding (DESIGN.md §10): multi-token verify — score a
+    # (B, C) candidate window at per-row positions in ONE step, returning
+    # the FULL (B, C, V) logits (one greedy token per window slot).
+    # (params, window (S,C), cache, positions (S,)) -> (logits, cache)
+    decode_verify: Optional[Callable[..., Any]] = None
+    # paged variant: + the (S,T) block tables operand
+    decode_verify_paged: Optional[Callable[..., Any]] = None
 
 
 def stack_layers(key: jax.Array, n: int, init_one: Callable[[jax.Array], Any], axis_name=None):

@@ -23,6 +23,7 @@ from repro.nn.attention import (
     attn_init,
     attn_prefill,
     attn_prefill_chunk,
+    attn_verify_step,
     init_kv_cache,
 )
 from repro.nn.mlp import mlp_apply, mlp_init
@@ -129,6 +130,17 @@ def _layer_decode_paged(p, cache, x, pos_tables, cfg: ArchConfig, phase: str):
     return _layer_ffn(p, x + a, cfg, phase), new_cache
 
 
+def _layer_verify(p, cache, x, position, cfg: ArchConfig, phase: str):
+    """Per-layer multi-token verify (speculative decoding): the dense-slot
+    analogue of ``_layer_decode`` over a (B, C) window."""
+    _, norm_apply = make_norm(cfg)
+    a, new_cache = attn_verify_step(
+        p["attn"], norm_apply(p["ln1"], x), cache, position, _attn_cfg(cfg),
+        cfg.linear_spec(), phase=phase,
+    )
+    return _layer_ffn(p, x + a, cfg, phase), new_cache
+
+
 def _layer_chunk(p, cache, x, start_tables, cfg: ArchConfig, phase: str):
     start, tables = start_tables
     _, norm_apply = make_norm(cfg)
@@ -216,6 +228,41 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
         x = norm_apply(params["ln_f"], x)
         return embedding.unembed_apply(params["embed"], x), new_cache
 
+    def decode_verify(params, tokens, cache, position):
+        """Speculative verify: tokens (B, C) scored at per-row positions
+        ``position + [0, C)`` in one step, KV written in place. Returns the
+        FULL (B, C, V) logits — slot j's argmax is the greedy successor of
+        window token j, exactly what C sequential ``decode_step`` calls
+        would have produced (DESIGN.md §10)."""
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, new_cache = scan_blocks_with_cache(
+            params["layers"],
+            cache,
+            x,
+            lambda p, c, h, pos: _layer_verify(p, c, h, pos, cfg, phase),
+            jnp.asarray(position, jnp.int32),
+        )
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
+    def decode_verify_paged(params, tokens, cache, position, tables):
+        """Paged speculative verify: rides ``attn_prefill_chunk``'s batched
+        per-row-start block-table append (the chunk path already implements
+        the multi-token causal score + OOB scatter-drop), but returns ALL
+        (B, C, V) logits instead of selecting one position per row."""
+        x = embedding.embed_apply(params["embed"], tokens, cdtype)
+        x, new_cache = scan_blocks_with_cache(
+            params["layers"],
+            cache,
+            x,
+            lambda p, c, h, st: _layer_chunk(p, c, h, st, cfg, phase),
+            (jnp.asarray(position, jnp.int32), tables),
+        )
+        _, norm_apply = make_norm(cfg)
+        x = norm_apply(params["ln_f"], x)
+        return embedding.unembed_apply(params["embed"], x), new_cache
+
     def prefill_chunk(params, tokens, cache, tables, start, last_in_chunk):
         """One fixed-size prompt chunk through every layer, appending its KV
         to the block pool. ``last_in_chunk`` ((B,) int32, position *within*
@@ -272,4 +319,6 @@ def build_lm(cfg: ArchConfig, *, phase: str = "train") -> ModelAPI:
         apply_aux=apply_aux,
         decode_paged=decode_paged,
         prefill_chunk=prefill_chunk,
+        decode_verify=decode_verify,
+        decode_verify_paged=decode_verify_paged,
     )

@@ -31,6 +31,7 @@ __all__ = [
     "attn_decode_step",
     "attn_decode_step_paged",
     "attn_prefill_chunk",
+    "attn_verify_step",
     "init_kv_cache",
     "dot_attention",
     "blockwise_attention",
@@ -412,6 +413,82 @@ def attn_decode_step(
         kv_valid_len=valid_len,
     )
     y = linear_apply(params["wo"], out.reshape(b, 1, -1), spec, phase=phase)
+    return y, new_cache
+
+
+def attn_verify_step(
+    params,
+    x: jax.Array,
+    cache,
+    position: jax.Array,
+    cfg: AttnConfig,
+    spec: LinearSpec,
+    *,
+    phase: str = "serve",
+):
+    """Multi-token verify over a dense per-slot cache (speculative decoding).
+
+    x: (B, C, D) — each row's verify window, occupying logical positions
+    ``position[i] + [0, C)``. The window's K/V are scattered at those
+    positions (out-of-range positions — a window overhanging ``max_len``
+    near the end of a row's budget — are dropped, never clamped), then the
+    window's queries attend the whole cache row under the causal
+    ``kv_pos <= q_pos`` mask. Because every speculative round writes C
+    *consecutive* positions and advances by 1..C, any stale keys a rejected
+    window left behind sit inside the next round's write range or causally
+    in the future of every query — so no ``kv_valid_len`` operand is needed
+    and the returned (B, C, V)-shaped logits are exactly what C sequential
+    ``attn_decode_step`` calls over the same tokens would produce
+    (DESIGN.md §10). C == 1 IS the decode step, same math, wider signature.
+    SWA is unsupported: a rejected window cannot be rolled back out of a
+    ring cache that already evicted the overwritten positions.
+    """
+    assert cfg.window is None, "speculative verify does not support sliding windows"
+    b, c, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(linear_apply(params["wq"], x, spec, phase=phase), cfg.n_heads, hd)
+    k = _split_heads(linear_apply(params["wk"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    v = _split_heads(linear_apply(params["wv"], x, spec, phase=phase), cfg.n_kv_heads, hd)
+    q = constrain(q, ("batch", "seq", "heads", None))
+    position = jnp.asarray(position, jnp.int32)
+    lp = position[:, None] + jnp.arange(c, dtype=jnp.int32)  # (B, C)
+    q = apply_rope(q, lp, cfg.rope_theta)
+    k = apply_rope(k, lp, cfg.rope_theta)
+
+    cache_len = cache["k"].shape[1]
+    rows = jnp.broadcast_to(jnp.arange(b)[:, None], (b, c))
+    # overhang positions (>= max_len) scatter-drop instead of clamping onto
+    # a live slot — the same discipline as attn_prefill_chunk's OOB blocks
+    quantized = "k_scale" in cache
+
+    def write(buf, upd):  # upd: (B, C, H, D|1) scattered at (row, lp) pairs
+        return buf.at[rows, lp].set(upd.astype(buf.dtype), mode="drop")
+
+    if quantized:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        new_cache = {
+            "k": write(cache["k"], kq),
+            "v": write(cache["v"], vq),
+            "k_scale": write(cache["k_scale"], ks),
+            "v_scale": write(cache["v_scale"], vs),
+        }
+        k_all = _dequantize_kv(new_cache["k"], new_cache["k_scale"], x.dtype)
+        v_all = _dequantize_kv(new_cache["v"], new_cache["v_scale"], x.dtype)
+    else:
+        new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+        k_all = new_cache["k"].astype(x.dtype)
+        v_all = new_cache["v"].astype(x.dtype)
+
+    out = dot_attention(
+        q,
+        k_all,
+        v_all,
+        q_positions=lp,
+        kv_positions=jnp.arange(cache_len),
+        causal=True,
+    )
+    y = linear_apply(params["wo"], out.reshape(b, c, -1), spec, phase=phase)
     return y, new_cache
 
 

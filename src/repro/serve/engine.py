@@ -38,6 +38,16 @@ tree_to_serve``) and builds the serve-phase model around it, so ANY
 registered quantized mode (including future ones) deploys through the same
 two lines.
 
+``spec_draft=`` + ``spec_k=`` turn on speculative decoding (DESIGN.md §10)
+on the continuous/paged engines: a cheaper registry form of the SAME
+trained weights drafts ``spec_k - 1`` tokens per slot and the target
+verifies the window in one batched step — greedy outputs stay
+token-for-token identical to target-only decode. ``from_trained`` accepts
+the draft as a preset string ("dense"/"bika"/"bnn"/"qnn8"/"small",
+resolved via serve/spec.py); the raw constructor wants the prebuilt
+``(draft_api, draft_params, draft_arch)`` triple. ``spec_k=1`` degenerates
+to plain decode; the static engine and mesh serving reject speculation.
+
 ``mesh=`` (+ optional ``rules=``) tensor-parallelizes either engine across a
 device mesh: params are placed with ``param_shardings``, KV caches shard
 ``kv_heads`` over the ``model`` axis per the layout contract, the jitted
@@ -94,6 +104,8 @@ class ServeEngine:
         tracer=None,
         registry=None,
         profile_sample: int = 0,
+        spec_draft=None,
+        spec_k: int = 1,
     ):
         self.api = api
         self.arch = arch
@@ -117,7 +129,17 @@ class ServeEngine:
 
             profiler = StepTimer(profile_sample, tracer=tracer)
         self.profiler = profiler
-        obs_kw = dict(tracer=tracer, registry=registry, profiler=profiler)
+        # speculative decoding (DESIGN.md §10): spec_draft is a prebuilt
+        # (draft_api, draft_params, draft_arch) triple — ``from_trained``
+        # resolves string presets ("bnn"/"qnn8"/"bika"/"dense"/"small")
+        # because only the train checkpoint can derive a weight-tied draft
+        if spec_draft is not None and engine not in ("continuous", "paged"):
+            raise ValueError(
+                f"spec_draft needs a slot-scheduler engine (continuous/paged); "
+                f"got engine={engine!r}"
+            )
+        obs_kw = dict(tracer=tracer, registry=registry, profiler=profiler,
+                      spec_draft=spec_draft, spec_k=spec_k)
         self.scheduler: Optional[SlotScheduler] = None
         if engine == "paged":
             self.scheduler = PagedSlotScheduler(
@@ -198,9 +220,19 @@ class ServeEngine:
         """Build a serve-phase engine directly from a trained checkpoint:
         converts every linear leaf through its registered backend's
         ``to_serve`` and instantiates the ``phase='serve'`` model around the
-        result."""
+        result.
+
+        ``spec_draft`` may be a string preset here ("bnn", "qnn8", "bika",
+        "dense", "small"): the SAME trained weights are converted through
+        the cheaper backend (or depth-sliced) into the speculative draft —
+        the registry-native draft/target pair (serve/spec.py)."""
         from repro.models import build_model
 
+        spec_draft = kw.get("spec_draft")
+        if isinstance(spec_draft, str):
+            from repro.serve.spec import build_draft_from_train
+
+            kw["spec_draft"] = build_draft_from_train(train_params, arch, spec_draft)
         api = build_model(arch, phase="serve")
         params = serve_params_from_train(train_params, arch.linear_spec())
         return cls(api, params, arch, batch_size=batch_size, max_len=max_len,

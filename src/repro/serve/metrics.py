@@ -129,6 +129,15 @@ class RunMetrics:
     kv_bytes_in_use_peak: int = 0  # high-water mark of referenced pool bytes
     decode_kv_bytes_read: int = 0  # modeled KV bytes moved by decode steps
     decode_rows: int = 0  # active decode rows summed over steps
+    # speculative decoding (DESIGN.md §10). Per (row, round): the draft
+    # proposes spec_k - 1 tokens; "accepted" counts the ones actually USED
+    # (emitted beyond the guaranteed target token) — budget/EOS truncation
+    # therefore reads as rejection, which keeps accept_rate an honest
+    # emitted-work figure. kv_pool_bytes above stays target-only; the draft
+    # pool's extra footprint is a bench-row concern (serving_bench).
+    spec_rounds: int = 0  # (row, round) pairs verified
+    spec_drafted_tokens: int = 0  # draft proposals offered
+    spec_accepted_tokens: int = 0  # proposals emitted (excl. the free token)
     # optional obs.registry.MetricsRegistry feed (see bind_registry)
     _registry: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False)
@@ -154,6 +163,12 @@ class RunMetrics:
             "serve_queue_wait_seconds", "submit -> slot-claimed delay", ln)
         self._h_prefill = registry.histogram(
             "serve_prefill_seconds", "slot-claimed -> first-token prefill", ln)
+        self._c_spec_rounds = registry.counter(
+            "serve_spec_rounds_total", "speculative (row, round) verifications", ln)
+        self._c_spec_drafted = registry.counter(
+            "serve_spec_drafted_tokens_total", "draft tokens proposed", ln)
+        self._c_spec_accepted = registry.counter(
+            "serve_spec_accepted_tokens_total", "draft tokens accepted and emitted", ln)
         return self
 
     def publish(self) -> None:
@@ -178,6 +193,34 @@ class RunMetrics:
     def record_blocks(self, in_use: int, bytes_in_use: int = 0) -> None:
         self.blocks_in_use_peak = max(self.blocks_in_use_peak, in_use)
         self.kv_bytes_in_use_peak = max(self.kv_bytes_in_use_peak, bytes_in_use)
+
+    def record_spec_round(self, rows: int, drafted: int, accepted: int) -> None:
+        """One speculative tick: ``rows`` active (row, round) pairs offered
+        ``drafted`` proposals total, of which ``accepted`` were emitted."""
+        self.spec_rounds += rows
+        self.spec_drafted_tokens += drafted
+        self.spec_accepted_tokens += accepted
+        if self._registry is not None:
+            lb = self._labels
+            self._c_spec_rounds.inc(rows, **lb)
+            self._c_spec_drafted.inc(drafted, **lb)
+            self._c_spec_accepted.inc(accepted, **lb)
+
+    @property
+    def spec_accept_rate(self) -> float:
+        """Fraction of draft proposals emitted (0.0 when not speculating)."""
+        if not self.spec_drafted_tokens:
+            return 0.0
+        return self.spec_accepted_tokens / self.spec_drafted_tokens
+
+    @property
+    def spec_tokens_per_round(self) -> float:
+        """Mean emitted tokens per (row, round): 1 guaranteed target token
+        plus the accepted draft prefix. The per-dispatch win speculation
+        banks — target-only decode is pinned at 1.0."""
+        if not self.spec_rounds:
+            return 0.0
+        return 1.0 + self.spec_accepted_tokens / self.spec_rounds
 
     @property
     def decode_hbm_bytes_per_token(self) -> float:
@@ -250,6 +293,11 @@ class RunMetrics:
             "kv_bytes_in_use_peak": self.kv_bytes_in_use_peak,
             "decode_kv_bytes_read": self.decode_kv_bytes_read,
             "decode_hbm_bytes_per_token": self.decode_hbm_bytes_per_token,
+            "spec_rounds": self.spec_rounds,
+            "spec_drafted_tokens": self.spec_drafted_tokens,
+            "spec_accepted_tokens": self.spec_accepted_tokens,
+            "spec_accept_rate": self.spec_accept_rate,
+            "spec_tokens_per_round": self.spec_tokens_per_round,
             "ttft_mean_s": sum(ttfts) / len(ttfts) if ttfts else None,
             "ttft_p50_s": _percentile(ttfts, 0.50) if ttfts else None,
             "ttft_p95_s": _percentile(ttfts, 0.95) if ttfts else None,

@@ -31,7 +31,13 @@ blocks hold its logical positions ``[0, max_len)``:
 
 Physical block ``n_phys - 1`` is the reserved *parking block*: freed decode
 rows keep ticking for shape stability (DESIGN.md §4.1) and their junk
-writes land there, never on a live block.
+writes land there, never on a live block. Table entries beyond a slot's
+reserved span also point at the parking block, which is what makes
+speculative verify windows (DESIGN.md §10) safe for free: a ``spec_k``-wide
+write that overhangs the reservation parks its overhang instead of
+corrupting a neighbor, and rejected-window rollback is pure position
+arithmetic — spec writes touch exactly the private block set normal decode
+would, never a shared prefix block.
 
 With ``mesh=`` the pool shards exactly like the dense contract —
 ``kv_heads`` over ``model`` (divisibility fallback to replication); block

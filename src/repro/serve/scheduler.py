@@ -33,6 +33,20 @@ NamedShardings so the one-compile-per-shape guarantee survives sharded
 inputs (DESIGN.md §5). Scheduling state (tokens, positions, the queue)
 stays host-side and replicated: scheduling decisions are identical on every
 device, so outputs are token-for-token the single-device outputs.
+
+Speculative decoding (``spec_draft=`` + ``spec_k=``, DESIGN.md §10): a cheap
+draft model rides the same slot indices in its own dense KV pool and
+proposes ``spec_k - 1`` tokens per slot per round; the target scores the
+whole ``spec_k``-wide window in ONE batched verify step. The accept rule —
+keep the longest prefix of draft tokens that match the target's own greedy
+choices, then always take the target's next token — makes greedy spec
+decode EXACT: emitted tokens are token-for-token what target-only decode
+would produce, for any draft. Rollback of a rejected suffix is free: both
+caches are position-masked, so resetting the host-side ``_pos`` makes the
+stale writes unattendable, and the next round's ``spec_k`` consecutive
+writes (advance is always 1..spec_k) overwrite them before any query can
+reach them. ``spec_k=1`` degenerates to the plain tick (no draft machinery
+is built). Speculative + ``mesh`` is not implemented.
 """
 from __future__ import annotations
 
@@ -107,12 +121,21 @@ class SlotScheduler:
         profiler: Optional[StepTimer] = None,
         mesh=None,
         rules=None,
+        spec_draft=None,
+        spec_k: int = 1,
     ):
         if not scheduler_supports(arch):
             raise ValueError(
                 f"SlotScheduler supports non-MoE, non-SWA 'lm' models; got family="
                 f"{arch.family!r} n_experts={arch.n_experts} window={arch.window} "
                 f"(use the static engine)"
+            )
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1, got {spec_k}")
+        if spec_draft is not None and spec_k > 1 and mesh is not None:
+            raise NotImplementedError(
+                "speculative decoding is single-device for now (the draft "
+                "pool and fused round program are not mesh-pinned)"
             )
         self.api = api
         self.arch = arch
@@ -141,6 +164,7 @@ class SlotScheduler:
             self._param_sh = None
             self._rep = None
         self.params = params
+        self._min_bucket = min_bucket
         self._init_kv_prefill(api, quantized_kv, min_bucket)
         self.metrics = RunMetrics(n_slots=n_slots)
         self._bind_metrics()
@@ -156,6 +180,12 @@ class SlotScheduler:
         self._tok = np.zeros(n_slots, np.int32)  # last emitted token per slot
         self._pos = np.zeros(n_slots, np.int32)  # cache position of the NEXT write
         self._tick_fn = self._build_tick()
+        # speculative decoding: spec_k == 1 degenerates to the plain tick
+        self.spec_k = spec_k
+        self._spec_api = None
+        if spec_draft is not None and spec_k > 1:
+            self._init_spec(spec_draft)
+            self._spec_fn = self._build_spec_fn()
 
     def _mesh_ctx(self):
         return self.mesh if self.mesh is not None else contextlib.nullcontext()
@@ -232,6 +262,160 @@ class SlotScheduler:
             in_shardings=(self._param_sh, self.kv._cache_sh, self._rep, self._rep),
             out_shardings=(self._rep, self.kv._cache_sh),
         )
+
+    # -- speculative decoding (DESIGN.md §10) -------------------------------
+
+    def _spec_verify_api(self):
+        """The target's multi-token verify callable for this KV layout
+        (paged overrides with decode_verify_paged)."""
+        return self.api.decode_verify
+
+    def _spec_operands(self):
+        """Extra per-round operands of the verify step (paged: the live
+        block tables — data, not shape, so the program never recompiles)."""
+        return ()
+
+    def _init_spec(self, spec_draft) -> None:
+        """Build the draft-side state: the draft model rides the SAME slot
+        indices as the target in its own dense fp KV pool (a rejected window
+        needs no rollback work — positions are the only bookkeeping), plus a
+        bucketed prefill so admission can seed the draft cache."""
+        if self._spec_verify_api() is None:
+            raise ValueError(
+                f"speculative decoding needs a model family with a "
+                f"multi-token verify path; {self.arch.family!r} has none"
+            )
+        dapi, dparams, darch = spec_draft
+        if darch.window is not None or darch.n_experts:
+            raise ValueError("draft model must be a non-MoE, non-SWA 'lm' model")
+        self._spec_api = dapi
+        self._spec_params = dparams
+        self._spec_arch = darch
+        self._spec_kv = KVSlotManager(
+            dapi, n_slots=self.n_slots, max_len=self.max_len,
+            quantized=False, mesh=None, rules=None,
+        )
+        self._spec_prefill = BucketedPrefill(
+            dapi, max_len=self.max_len, quantized=False,
+            min_bucket=self._min_bucket, mesh=None, rules=None,
+            param_sh=None, tracer=self.tracer,
+        )
+
+    def _build_spec_fn(self):
+        """ONE jitted program per speculative round (both caches donated):
+        the draft rolls ``spec_k`` sequential decode steps under lax.scan —
+        consuming the current token then its own proposals, so its KV always
+        covers the window — and the target verifies the ``spec_k``-wide
+        window (current token + spec_k-1 proposals) in a single batched
+        step. Two host dispatches per round would also work; one keeps the
+        draft loop off the dispatch critical path entirely."""
+        draft_decode = self._spec_api.decode_step
+        verify = self._spec_verify_api()
+        c = self.spec_k
+
+        def spec_round(params, cache, dparams, dcache, tok, pos, *extra):
+            def roll(carry, j):
+                t, dc = carry
+                logits, dc = draft_decode(dparams, t[:, None], dc, pos + j)
+                nt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return (nt, dc), nt
+
+            # scan step j consumes window token j at position pos + j and
+            # writes its draft KV there; the last step's proposal (props[-1])
+            # is beyond the window and discarded
+            (_, dcache), props = jax.lax.scan(
+                roll, (tok, dcache), jnp.arange(c, dtype=jnp.int32)
+            )
+            window = jnp.concatenate([tok[:, None], props[:-1].T], axis=1)
+            logits, cache = verify(params, window, cache, pos, *extra)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)  # (S, C) greedy
+            return window, nxt, cache, dcache
+
+        return jax.jit(spec_round, donate_argnums=(1, 3))
+
+    def _run_spec_tick(self):
+        with self._mesh_ctx():
+            window, nxt, self.kv.cache, self._spec_kv.cache = self._spec_fn(
+                self.params, self.kv.cache, self._spec_params,
+                self._spec_kv.cache, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), *self._spec_operands(),
+            )
+        # repro: noqa-RPA001 -- tick barrier (see SlotScheduler._run_tick):
+        # the accept rule compares draft vs target tokens on the host
+        return np.asarray(window), np.asarray(nxt)
+
+    def _spec_admit(self, slot: int, req: Request) -> None:
+        """Seed the draft's KV for a freshly admitted request (no-op when
+        speculation is off). The draft prefill's own next-token logits are
+        discarded — the target's admission token is the ground truth the
+        first round drafts from."""
+        if self._spec_api is None:
+            return
+        _logits, dcache = self._spec_prefill(self._spec_params, req.prompt)
+        self._spec_kv.write_prefill(slot, dcache)
+
+    def _spec_tick(self) -> bool:
+        """One speculative round over the slot batch: draft spec_k-1 tokens,
+        verify the window in one target step, emit the accepted prefix plus
+        the target's correction. Per row the advance ``e`` is 1..spec_k
+        tokens; ``_pos += e`` IS the rollback — stale cache writes past the
+        new position are causally masked and overwritten next round."""
+        prof = self.profiler
+        prof.tick()
+        with prof.phase("admit"):
+            self._admit()
+        active = [i for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return False
+        with prof.phase("decode"):
+            if not self._tick_compiled and self.tracer.enabled:
+                with self.tracer.span("compile", "scheduler", kind="spec_round",
+                                      n_slots=self.n_slots, spec_k=self.spec_k):
+                    window, nxt = self._run_spec_tick()
+            else:
+                window, nxt = self._run_spec_tick()
+            prof.sync(nxt)
+            self._tick_compiled = True
+        with prof.phase("host"):
+            self.metrics.record_step(
+                len(active), kv_bytes_read=self._decode_kv_bytes(active))
+            c = self.spec_k
+            drafted = accepted = 0
+            for i in active:
+                st = self._slots[i]
+                w, g = window[i], nxt[i]
+                # accept rule: longest prefix of draft tokens matching the
+                # target's greedy choices (w[j] drafted token j, g[j-1] the
+                # target's token after window slot j-1), then ALWAYS take
+                # the target's next token g[a-1] — exactness for free
+                a = 1
+                while a < c and w[a] == g[a - 1]:
+                    a += 1
+                e = 0
+                done = False
+                for j in range(a):
+                    e += 1
+                    done = self._emit(st, int(g[j]))
+                    if done:
+                        break  # budget/EOS truncation: e <= a tokens used
+                self._tok[i] = g[e - 1]
+                self._pos[i] += e
+                drafted += c - 1
+                accepted += e - 1
+                if done:
+                    self._finish(st.req, st, i)
+                    self._slots[i] = None
+                    self._release_slot(i)
+                    self._tok[i] = 0
+                    self._pos[i] = 0
+            self.metrics.record_spec_round(len(active), drafted, accepted)
+            if self.tracer.enabled:
+                # per-round event carrying the same counts the metrics
+                # accumulate — trace_report-style reconciliation sums these
+                self.tracer.event("spec_round", track="scheduler",
+                                  rows=len(active), drafted=drafted,
+                                  accepted=accepted)
+        return True
 
     # -- queue --------------------------------------------------------------
 
@@ -336,6 +520,7 @@ class SlotScheduler:
         self._slots[slot] = st
         self._tok[slot] = t0
         self._pos[slot] = plen
+        self._spec_admit(slot, req)
         return True
 
     def _trace_admission(self, req: Request, slot: int, **extra) -> None:
@@ -365,6 +550,8 @@ class SlotScheduler:
         StepTimer samples every Nth tick, splitting wall time into admit
         (queue + prefill) / decode (device step, synced in-phase) / host
         (emit + EOS bookkeeping) phases."""
+        if self._spec_api is not None:
+            return self._spec_tick()
         prof = self.profiler
         prof.tick()
         with prof.phase("admit"):
@@ -586,7 +773,20 @@ class PagedSlotScheduler(SlotScheduler):
         self._slots[slot] = st
         self._tok[slot] = t0
         self._pos[slot] = plen
+        self._spec_admit(slot, req)
         return True
+
+    # -- speculative hooks --------------------------------------------------
+
+    def _spec_verify_api(self):
+        return self.api.decode_verify_paged
+
+    def _spec_operands(self):
+        # the LIVE tables at round time — admissions/releases between rounds
+        # repoint rows, and a verify window overhanging a row's reserved
+        # span lands in the parking block (tables default to it), exactly
+        # like an inactive row's junk decode writes
+        return (jnp.asarray(self.kv.tables),)
 
 
 def replay_arrivals(

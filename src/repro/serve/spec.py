@@ -1,0 +1,122 @@
+"""Speculative-decoding draft construction (DESIGN.md §10).
+
+BiKA's thesis — binarized/quantized compute as a cheap proxy for the
+full-precision network — is exactly the draft/target contract speculative
+decoding needs, and the backend registry already holds every proxy as a
+different serve form of the SAME trained weights. ``build_draft_from_train``
+turns one trained float checkpoint into a (draft_api, draft_params,
+draft_arch) triple for any preset:
+
+- ``"bnn"`` / ``"qnn8"`` / ``"bika"`` / ``"dense"`` — the registry-native
+  drafts: the target's own trained weights pushed through a cheaper
+  backend's ``to_serve`` (core/convert.tree_to_serve). Weight-tied drafts
+  track the target's distribution closely, which is what keeps the
+  acceptance rate high.
+- ``"small"`` — a depth-sliced dense draft: the first ``n_layers // 2``
+  stacked layer params (plus the shared embedding / final norm) served
+  dense. Half the per-token FLOPs of the target at whatever acceptance the
+  truncated stack earns.
+
+Greedy speculative decoding is exact for ANY draft — the accept rule keeps
+emitted tokens token-for-token identical to target-only decode — so the
+preset only moves the speedup (acceptance rate x draft cost), never
+correctness (serve/scheduler.py pins that oracle in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import get_backend
+from repro.models.base import ArchConfig
+
+__all__ = ["DRAFT_PRESETS", "build_draft_from_train", "draft_arch"]
+
+DRAFT_PRESETS = ("dense", "bika", "bnn", "qnn8", "small")
+
+# Backends whose training form is a plain (K, N) matmul weight — freely
+# inter-convertible draft/target pairs. bika trains an (m, K, N) threshold
+# tensor instead, so it only pairs with itself.
+_MATMUL_MODES = ("dense", "bnn", "qnn8")
+
+
+def draft_arch(arch: ArchConfig, preset: str) -> ArchConfig:
+    """The draft model's ArchConfig for a preset (see module docstring)."""
+    if preset not in DRAFT_PRESETS:
+        raise ValueError(f"unknown draft preset {preset!r}; want one of {DRAFT_PRESETS}")
+    if preset == "small":
+        return arch.replace(compute_mode="dense", pack_signs=False,
+                            n_layers=max(1, arch.n_layers // 2))
+    pack = arch.pack_signs if preset == "bika" else False
+    return arch.replace(compute_mode=preset, pack_signs=pack)
+
+
+def _adapt_train_leaf(leaf, tgt_mode: str, draft_mode: str):
+    """A target-backend training leaf -> one the draft backend's ``to_serve``
+    accepts. Same-mode is a passthrough; across the matmul family the shared
+    ``w`` carries over (bnn synthesizes its per-output scale as the optimal
+    L2 binarization scale ``gamma = E|w|``; bnn is bias-free so ``b`` drops)."""
+    if draft_mode == tgt_mode:
+        return dict(leaf)
+    if tgt_mode not in _MATMUL_MODES or draft_mode not in _MATMUL_MODES:
+        raise ValueError(
+            f"cannot build a {draft_mode!r} draft from a {tgt_mode!r}-trained "
+            f"tree: bika's (m, K, N) threshold form has no matmul weight to "
+            f"share; pair bika with itself or use a {_MATMUL_MODES} target"
+        )
+    out = {"w": leaf["w"]}
+    if draft_mode == "bnn":
+        out["gamma"] = jnp.mean(jnp.abs(leaf["w"]), axis=-2)
+    elif "b" in leaf:
+        out["b"] = leaf["b"]
+    return out
+
+
+def _convert_tree(tree, tgt_mode: str, tgt_spec, draft_mode: str, draft_spec):
+    """``convert.tree_to_serve`` with split detection/conversion backends:
+    linear leaves are identified by the TARGET backend's ``train_param_keys``
+    (that is the backend the tree was trained under) and converted through
+    the DRAFT backend's ``to_serve`` after ``_adapt_train_leaf``."""
+    req, opt = get_backend(tgt_mode).train_param_keys(tgt_spec)
+    draft_be = get_backend(draft_mode)
+
+    def _arrayish(v):
+        return hasattr(v, "shape") and hasattr(v, "dtype")
+
+    def walk(node):
+        if isinstance(node, dict):
+            keys = frozenset(node)
+            if req <= keys <= (req | opt) and all(_arrayish(v) for v in node.values()):
+                return draft_be.to_serve(
+                    _adapt_train_leaf(node, tgt_mode, draft_mode), draft_spec
+                )
+            return {k: walk(v) for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(tree)
+
+
+def build_draft_from_train(train_params, arch: ArchConfig, preset: str):
+    """Trained float checkpoint -> (draft_api, draft_params, draft_arch).
+
+    Linear leaves are found with the TARGET backend's training keys and
+    converted through the draft backend (``_convert_tree``); ``"small"``
+    first slices the stacked ``params["layers"]`` leaves to the truncated
+    depth (embedding and final norm are shared with the target — the draft
+    predicts in the same token space by construction).
+    """
+    from repro.models import build_model
+
+    darch = draft_arch(arch, preset)
+    tree = train_params
+    if preset == "small":
+        tree = dict(train_params)
+        tree["layers"] = jax.tree_util.tree_map(
+            lambda leaf: leaf[: darch.n_layers], train_params["layers"]
+        )
+    dapi = build_model(darch, phase="serve")
+    dparams = _convert_tree(tree, arch.compute_mode, arch.linear_spec(),
+                            darch.compute_mode, darch.linear_spec())
+    return dapi, dparams, darch
